@@ -1,0 +1,43 @@
+"""ApproxPilot-LM: the paper's DSE technique applied to the LM framework
+(beyond-paper extension, DESIGN.md SBeyond).
+
+Per-op precision selection {bf16, fp8, int8} over the transformer op graph,
+NSGA-III on the v5e roofline cost model, quality-constrained.
+
+    PYTHONPATH=src python examples/approxpilot_lm.py --arch qwen2.5-32b \
+        --shape decode_32k
+"""
+import argparse
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape
+from repro.core import lm_bridge
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b", choices=sorted(ARCHS))
+    ap.add_argument("--shape", default="decode_32k", choices=sorted(SHAPES))
+    ap.add_argument("--budget", type=int, default=2000)
+    ap.add_argument("--max-penalty", type=float, default=6.0)
+    args = ap.parse_args()
+
+    out = lm_bridge.run_dse(get_arch(args.arch), get_shape(args.shape),
+                            budget=args.budget,
+                            max_penalty=args.max_penalty)
+    b = out["baseline"]
+    print(f"bf16 baseline: step={b['time'] * 1e3:.2f}ms "
+          f"hbm={b['hbm_gb']:.2f}GB critical_op={b['critical_op']}")
+    print(f"pareto ({len(out['pareto'])} feasible points):")
+    for cfgx, obj in out["pareto"][:8]:
+        ops = {o: lm_bridge.PRECISIONS[c]
+               for o, c in zip(out["ops"], cfgx)}
+        print(f"  step={obj[0] * 1e3:.2f}ms hbm={obj[1]:.2f}GB "
+              f"penalty={obj[2]:.1f}  {ops}")
+    if out["best"]:
+        _, obj = out["best"]
+        print(f"\nbest feasible: {b['time'] / obj[0]:.2f}x step speedup, "
+              f"{b['hbm_gb'] / max(obj[1], 1e-9):.2f}x HBM reduction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Continuous-batching serving demo (see repro/launch/serve.py).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""End-to-end LM training driver with fault drills.
+
+    PYTHONPATH=src python examples/train_lm.py --arch granite-3-2b \
+        --steps 200 --width full-reduced
+
+Trains a reduced config of any of the 10 assigned architectures on the
+synthetic token pipeline, with checkpointing + a crash drill mid-run; the
+loss must go down and the run must survive the injected failure.
+(The same driver trains the full configs on a real pod: drop --reduced and
+point --mesh at the production mesh.)
+"""
+import argparse
+
+from repro.configs import ARCHS, REDUCED_ARCHS
+from repro.configs.base import ShapeConfig
+from repro.distributed.fault import FaultInjector
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--no-drill", action="store_true")
+    args = ap.parse_args()
+
+    cfg = REDUCED_ARCHS[args.arch]
+    shape = ShapeConfig("example", args.seq, args.batch, "train")
+    inj = None if args.no_drill else FaultInjector(
+        crash_at=[args.steps // 2], stall_at=[args.steps // 3])
+    out = train(cfg, shape, args.steps, args.ckpt, injector=inj,
+                ckpt_every=max(args.steps // 10, 1), log_every=10)
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {out['final_step']} steps "
+          f"(stragglers flagged: {out['stragglers']})")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Benchmark accelerators: Sobel edge detector, Gaussian filter, K-means.
+
+Each accelerator is (a) a dataflow graph over *physical* arithmetic-unit
+instances (Table II counts exactly: Sobel 2xadd8+2xadd12+1xsub10, Gaussian
+8xadd16+9xmul8x4, Kmeans 2xadd16+6xsub10+6xmul8+2xsqrt18) plus fixed
+components (memories, abs, comparators, dividers), and (b) a vectorized
+functional model: the same physical unit is REUSED for every operation
+mapped onto it, exactly like the streamed RTL the paper synthesizes.
+
+Accuracy = mean SSIM between approximate and exact outputs on the image set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accel import library as lib
+
+
+@dataclass(frozen=True)
+class Node:
+    id: str
+    kind: str                 # unit kind ("add8"...) or fixed kind
+    fixed: bool = False
+
+
+@dataclass(frozen=True)
+class AccelDef:
+    name: str
+    nodes: Tuple[Node, ...]
+    edges: Tuple[Tuple[str, str], ...]
+    run: Callable                 # (impls: {unit_id: fn}, images) -> images
+
+    @property
+    def unit_nodes(self) -> List[Node]:
+        return [n for n in self.nodes if not n.fixed]
+
+    def space_size(self, counts=None) -> float:
+        s = 1.0
+        L = lib.TABLE_III if counts is None else counts
+        for n in self.unit_nodes:
+            s *= L[n.kind]
+        return s
+
+
+def _win(img: jax.Array, dy: int, dx: int) -> jax.Array:
+    """3x3 neighbor with replicate padding; img: (..., H, W) int32."""
+    return jnp.roll(img, (-dy, -dx), axis=(-2, -1))
+
+
+# --------------------------------------------------------------------------
+# Sobel
+# --------------------------------------------------------------------------
+
+def _sobel_run(impls: Dict[str, Callable], images: jax.Array) -> jax.Array:
+    """images: (N,H,W) grayscale int32 [0,255] -> edge magnitude (N,H,W)."""
+    g = images
+    p = {(dy, dx): _win(g, dy, dx) for dy in (-1, 0, 1) for dx in (-1, 0, 1)}
+    a8_1, a8_2 = impls["a8_1"], impls["a8_2"]
+    a12_1, a12_2, s10 = impls["a12_1"], impls["a12_2"], impls["s10"]
+    # Gx = (p(+1 col) + 2 mid) - (p(-1 col) + 2 mid)
+    gxp = a12_1(a8_1(p[(-1, 1)], p[(1, 1)]), p[(0, 1)] << 1)
+    gxn = a12_1(a8_1(p[(-1, -1)], p[(1, -1)]), p[(0, -1)] << 1)
+    gyp = a12_2(a8_2(p[(1, -1)], p[(1, 1)]), p[(1, 0)] << 1)
+    gyn = a12_2(a8_2(p[(-1, -1)], p[(-1, 1)]), p[(-1, 0)] << 1)
+    gx = jnp.abs(s10(gxp, gxn))          # abs is fixed logic
+    gy = jnp.abs(s10(gyp, gyn))
+    mag = a12_2(gx, gy)                  # reuse a12_2 for |gx|+|gy|
+    return jnp.clip(mag >> 3, 0, 255)
+
+
+SOBEL = AccelDef(
+    name="sobel",
+    nodes=(
+        Node("img_mem", "mem", fixed=True),
+        Node("a8_1", "add8"), Node("a8_2", "add8"),
+        Node("a12_1", "add12"), Node("a12_2", "add12"),
+        Node("s10", "sub10"),
+        Node("abs1", "abs", fixed=True), Node("abs2", "abs", fixed=True),
+        Node("out_mem", "mem", fixed=True),
+    ),
+    edges=(
+        ("img_mem", "a8_1"), ("img_mem", "a8_2"),
+        ("img_mem", "a12_1"), ("img_mem", "a12_2"),
+        ("a8_1", "a12_1"), ("a8_2", "a12_2"),
+        ("a12_1", "s10"), ("a12_2", "s10"),
+        ("s10", "abs1"), ("s10", "abs2"),
+        ("abs1", "a12_2"), ("abs2", "a12_2"),
+        ("a12_2", "out_mem"),
+    ),
+    run=_sobel_run,
+)
+
+
+# --------------------------------------------------------------------------
+# Gaussian 3x3 (coeffs 1,2,1 / 2,4,2 / 1,2,1, /16)
+# --------------------------------------------------------------------------
+
+_GAUSS_W = {(-1, -1): 1, (-1, 0): 2, (-1, 1): 1,
+            (0, -1): 2, (0, 0): 4, (0, 1): 2,
+            (1, -1): 1, (1, 0): 2, (1, 1): 1}
+
+
+def _gauss_run(impls: Dict[str, Callable], images: jax.Array) -> jax.Array:
+    g = images
+    taps = list(_GAUSS_W.items())
+    m = [impls[f"m{i}"](_win(g, dy, dx), jnp.full_like(g, w))
+         for i, ((dy, dx), w) in enumerate(taps)]
+    a = impls
+    t1 = a["a0"](m[0], m[1])
+    t2 = a["a1"](m[2], m[3])
+    t3 = a["a2"](m[4], m[5])
+    t4 = a["a3"](m[6], m[7])
+    t5 = a["a4"](t1, t2)
+    t6 = a["a5"](t3, t4)
+    t7 = a["a6"](t5, t6)
+    t8 = a["a7"](t7, m[8])
+    return jnp.clip(t8 >> 4, 0, 255)
+
+
+GAUSSIAN = AccelDef(
+    name="gaussian",
+    nodes=tuple(
+        [Node("img_mem", "mem", fixed=True), Node("coeff_rom", "mem", fixed=True)]
+        + [Node(f"m{i}", "mul8x4") for i in range(9)]
+        + [Node(f"a{i}", "add16") for i in range(8)]
+        + [Node("shift", "shift", fixed=True), Node("out_mem", "mem", fixed=True)]),
+    edges=tuple(
+        [("img_mem", f"m{i}") for i in range(9)]
+        + [("coeff_rom", f"m{i}") for i in range(9)]
+        + [("m0", "a0"), ("m1", "a0"), ("m2", "a1"), ("m3", "a1"),
+           ("m4", "a2"), ("m5", "a2"), ("m6", "a3"), ("m7", "a3"),
+           ("a0", "a4"), ("a1", "a4"), ("a2", "a5"), ("a3", "a5"),
+           ("a4", "a6"), ("a5", "a6"), ("a6", "a7"), ("m8", "a7"),
+           ("a7", "shift"), ("shift", "out_mem")]),
+    run=_gauss_run,
+)
+
+
+# --------------------------------------------------------------------------
+# K-means (2 clusters x RGB, one assignment pass, AxBench-style segmentation)
+# --------------------------------------------------------------------------
+
+_CENTERS = np.array([[70, 80, 90], [180, 170, 160]], np.int32)
+
+
+def _kmeans_run(impls: Dict[str, Callable], images: jax.Array) -> jax.Array:
+    """images: (N,H,W,3) int32 RGB -> segmented grayscale (N,H,W)."""
+    dists = []
+    for c in range(2):
+        sq = []
+        for j, ch in enumerate("rgb"):
+            d = impls[f"s_{c}{ch}"](images[..., j],
+                                    jnp.full_like(images[..., j],
+                                                  int(_CENTERS[c, j])))
+            d = jnp.abs(d)                        # fixed abs
+            sq.append(impls[f"m_{c}{ch}"](d, d) >> 2)   # fixed >>2 rescale
+        acc = impls[f"a_{c}"](sq[0], sq[1])
+        acc = impls[f"a_{c}"](acc, sq[2])         # physical adder reused
+        dists.append(impls[f"q_{c}"](acc << 2, None))
+    assign = (dists[1] < dists[0]).astype(jnp.int32)     # fixed comparator
+    gray_centers = jnp.asarray(_CENTERS.mean(axis=1).astype(np.int32))
+    return gray_centers[assign]
+
+
+KMEANS = AccelDef(
+    name="kmeans",
+    nodes=tuple(
+        [Node("img_mem", "mem", fixed=True), Node("cluster_mem", "mem", fixed=True),
+         Node("center_mem1", "mem", fixed=True), Node("center_mem2", "mem", fixed=True),
+         Node("center_mem3", "mem", fixed=True)]
+        + [Node(f"s_{c}{ch}", "sub10") for c in range(2) for ch in "rgb"]
+        + [Node(f"m_{c}{ch}", "mul8") for c in range(2) for ch in "rgb"]
+        + [Node(f"a_{c}", "add16") for c in range(2)]
+        + [Node(f"q_{c}", "sqrt18") for c in range(2)]
+        + [Node("div1", "div", fixed=True), Node("div2", "div", fixed=True),
+           Node("div3", "div", fixed=True), Node("cmp", "cmp", fixed=True)]),
+    edges=tuple(
+        [("img_mem", f"s_{c}{ch}") for c in range(2) for ch in "rgb"]
+        + [(f"center_mem{j + 1}", f"s_{c}{ch}")
+           for c in range(2) for j, ch in enumerate("rgb")]
+        + [(f"s_{c}{ch}", f"m_{c}{ch}") for c in range(2) for ch in "rgb"]
+        + [(f"m_{c}{ch}", f"a_{c}") for c in range(2) for ch in "rgb"]
+        + [(f"a_{c}", f"q_{c}") for c in range(2)]
+        + [(f"q_{c}", "cmp") for c in range(2)]
+        + [("cmp", "cluster_mem")]
+        + [("cluster_mem", f"div{j}") for j in (1, 2, 3)]
+        + [(f"div{j}", f"center_mem{j}") for j in (1, 2, 3)]),
+    run=_kmeans_run,
+)
+
+APPS: Dict[str, AccelDef] = {"sobel": SOBEL, "gaussian": GAUSSIAN,
+                             "kmeans": KMEANS}
+
+
+# --------------------------------------------------------------------------
+# configuration -> functional model + SSIM accuracy
+# --------------------------------------------------------------------------
+
+def make_impls(app: AccelDef, choice: Dict[str, lib.LibEntry]
+               ) -> Dict[str, Callable]:
+    out = {}
+    for n in app.unit_nodes:
+        entry = choice[n.id]
+        fn = entry.inst.fn()
+        if entry.inst.kind.op == "sqrt":
+            out[n.id] = lambda a, b=None, f=fn: f(a)
+        else:
+            out[n.id] = fn
+    return out
+
+
+def exact_choice(app: AccelDef) -> Dict[str, lib.LibEntry]:
+    return {n.id: lib.build_library(n.kind)[0] for n in app.unit_nodes}
+
+
+def ssim(a: jax.Array, b: jax.Array, data_range: float = 255.0) -> jax.Array:
+    """Mean SSIM, 8x8 uniform windows, per image pair (N,H,W)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    N, H, W = a.shape
+    h8, w8 = (H // 8) * 8, (W // 8) * 8
+    aw = a[:, :h8, :w8].reshape(N, h8 // 8, 8, w8 // 8, 8)
+    bw = b[:, :h8, :w8].reshape(N, h8 // 8, 8, w8 // 8, 8)
+    ax = (2, 4)
+    mu_a = aw.mean(ax)
+    mu_b = bw.mean(ax)
+    var_a = aw.var(ax)
+    var_b = bw.var(ax)
+    cov = (aw * bw).mean(ax) - mu_a * mu_b
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    s = ((2 * mu_a * mu_b + c1) * (2 * cov + c2)) / (
+        (mu_a ** 2 + mu_b ** 2 + c1) * (var_a + var_b + c2))
+    return s.mean()
+
+
+def accuracy_ssim(app: AccelDef, choice: Dict[str, lib.LibEntry],
+                  images: jax.Array, exact_out: jax.Array | None = None
+                  ) -> float:
+    approx = app.run(make_impls(app, choice), images)
+    if exact_out is None:
+        exact_out = app.run(make_impls(app, exact_choice(app)), images)
+    return float(ssim(approx, exact_out))

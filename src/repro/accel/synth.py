@@ -1,0 +1,121 @@
+"""Simulated synthesis oracle: accelerator-level PPA + critical path.
+
+Stands in for the Synopsys DC flow of the paper (hardware gate, see
+DESIGN.md). Given an accelerator graph and a unit choice per node:
+
+  area    = sum of unit areas + fixed-component areas           (+jitter)
+  power   = sum of dynamic power x activity + leakage           (+jitter)
+  latency = longest path through the DAG; node delay = unit latency
+            + wire delay proportional to fanout
+  critical path = set of nodes on any longest path (stage-1 GNN labels)
+
+Jitter is deterministic in the configuration hash, modelling run-to-run
+synthesis variation, so dataset labels are reproducible.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Sequence, Set, Tuple
+
+import networkx as nx
+import numpy as np
+
+from repro.accel import library as lib
+from repro.accel.apps import AccelDef
+
+_FIXED_PPA = {
+    "mem": {"area": 220.0, "power": 35.0, "latency": 4.0},
+    "abs": {"area": 12.0, "power": 3.0, "latency": 2.5},
+    "cmp": {"area": 18.0, "power": 4.0, "latency": 3.0},
+    "div": {"area": 450.0, "power": 60.0, "latency": 0.0},  # off critical loop
+    "shift": {"area": 2.0, "power": 0.5, "latency": 0.5},
+}
+_WIRE_DELAY_PER_FANOUT = 0.35
+_LEAKAGE_FRAC = 0.08
+
+
+def _jitter(key: str, spread: float = 0.004) -> float:
+    # run-to-run synthesis variation; must stay well below the
+    # configuration-induced PPA spread or it becomes the R^2 noise floor
+    h = int(hashlib.sha256(key.encode()).hexdigest()[:8], 16)
+    return 1.0 + ((h % 1000) - 500) / 500.0 * spread
+
+
+def _graph(app: AccelDef) -> nx.DiGraph:
+    g = nx.DiGraph()
+    for n in app.nodes:
+        g.add_node(n.id, kind=n.kind, fixed=n.fixed)
+    g.add_edges_from(app.edges)
+    return g
+
+
+def node_ppa(app: AccelDef, choice: Dict[str, lib.LibEntry]
+             ) -> Dict[str, Dict[str, float]]:
+    out = {}
+    for n in app.nodes:
+        if n.fixed:
+            out[n.id] = dict(_FIXED_PPA[n.kind])
+        else:
+            e = choice[n.id]
+            out[n.id] = {"area": e.area, "power": e.power,
+                         "latency": e.latency}
+    return out
+
+
+def synthesize(app: AccelDef, choice: Dict[str, lib.LibEntry]
+               ) -> Dict[str, object]:
+    """Returns {area, power, latency, critical_nodes (set), node_delay}."""
+    g = _graph(app)
+    ppa = node_ppa(app, choice)
+    cfg_key = app.name + "|" + ",".join(
+        f"{k}:{v.inst.name}" for k, v in sorted(choice.items()))
+
+    area = sum(p["area"] for p in ppa.values()) * _jitter(cfg_key + "A")
+    dyn = sum(p["power"] for p in ppa.values())
+    power = dyn * (1 + _LEAKAGE_FRAC) * _jitter(cfg_key + "P")
+
+    # longest-path DP needs a DAG. Physical unit REUSE introduces cycles
+    # (a unit feeding itself across pipeline stages); those back-edges are
+    # registered in the RTL, so they are sequential boundaries, not
+    # combinational paths. Break them deterministically in edge order.
+    acyclic = nx.DiGraph()
+    acyclic.add_nodes_from(g.nodes(data=True))
+    for u, v in app.edges:
+        if u == v:
+            continue
+        acyclic.add_edge(u, v)
+        if not nx.is_directed_acyclic_graph(acyclic):
+            acyclic.remove_edge(u, v)      # registered feedback edge
+    assert nx.is_directed_acyclic_graph(acyclic), app.name
+
+    delay = {}
+    for nid in acyclic.nodes:
+        fan = max(acyclic.out_degree(nid), 1)
+        delay[nid] = ppa[nid]["latency"] + _WIRE_DELAY_PER_FANOUT * fan
+
+    order = list(nx.topological_sort(acyclic))
+    arrive = {nid: delay[nid] for nid in order}
+    for nid in order:
+        for _, v in acyclic.out_edges(nid):
+            arrive[v] = max(arrive[v], arrive[nid] + delay[v])
+    latency = max(arrive.values()) * _jitter(cfg_key + "L")
+
+    # critical nodes: on some path achieving the max arrival
+    crit: Set[str] = set()
+    tmax = max(arrive.values())
+    req = {nid: -1e30 for nid in order}
+    for nid in order:
+        if abs(arrive[nid] - tmax) < 1e-9:
+            req[nid] = tmax
+    for nid in reversed(order):
+        for _, v in acyclic.out_edges(nid):
+            if req[v] > -1e29 and abs(
+                    arrive[nid] + delay[v] - req[v]) < 1e-9:
+                req[nid] = max(req[nid], arrive[nid])
+    for nid in order:
+        if req[nid] > -1e29:
+            crit.add(nid)
+
+    return {"area": float(area), "power": float(power),
+            "latency": float(latency), "critical_nodes": crit,
+            "node_delay": delay}

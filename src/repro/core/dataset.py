@@ -1,0 +1,179 @@
+"""Dataset construction for the PPA/accuracy prediction models (Sec III-B1).
+
+Random sampling over the (pruned) design space with symmetric-structure
+deduplication; labels from the simulated synthesis oracle (PPA + critical
+path) and the vectorized functional model (SSIM on the image set).
+
+Paper scale: 55k/105k/105k samples, 90/10 split. CPU-scaled defaults are
+smaller; pass --paper-faithful in benchmarks to use the original sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accel import apps as apps_lib
+from repro.accel import library as lib
+from repro.accel import synth
+from repro.core import graph as graph_lib
+from repro.data import images as images_lib
+
+# function-level symmetric tap groups (equal coefficients / equivalent
+# streams) used for duplicate elimination — see DESIGN.md.
+SYMMETRY = {
+    "gaussian": (("m0", "m2", "m6", "m8"), ("m1", "m3", "m5", "m7")),
+    "sobel": (),
+    "kmeans": (),
+}
+
+
+@dataclass
+class AccelDataset:
+    app_name: str
+    graph: graph_lib.SimpleGraph
+    adj: np.ndarray          # (B,N,N) normalized
+    x: np.ndarray            # (B,N,F) crit bit zeroed
+    mask: np.ndarray         # (B,N)
+    unit_mask: np.ndarray    # (B,N) 1 on arithmetic-unit nodes
+    y: np.ndarray            # (B,4) normalized [area,power,latency,ssim]
+    y_raw: np.ndarray
+    crit: np.ndarray         # (B,N) ground truth critical-path bits
+    configs: List[Tuple[int, ...]]
+    y_mean: np.ndarray
+    y_std: np.ndarray
+    x_mean: np.ndarray
+    x_std: np.ndarray
+
+    def split(self, frac: float = 0.9):
+        n = int(len(self.y) * frac)
+        tr = dataclasses.replace(
+            self, adj=self.adj[:n], x=self.x[:n], mask=self.mask[:n],
+            unit_mask=self.unit_mask[:n], y=self.y[:n], y_raw=self.y_raw[:n],
+            crit=self.crit[:n], configs=self.configs[:n])
+        te = dataclasses.replace(
+            self, adj=self.adj[n:], x=self.x[n:], mask=self.mask[n:],
+            unit_mask=self.unit_mask[n:], y=self.y[n:], y_raw=self.y_raw[n:],
+            crit=self.crit[n:], configs=self.configs[n:])
+        return tr, te
+
+    def denorm_y(self, y: np.ndarray) -> np.ndarray:
+        return y * self.y_std + self.y_mean
+
+    # flat per-graph feature vector for the random-forest baseline
+    def flat_features(self) -> np.ndarray:
+        B = self.x.shape[0]
+        return (self.x[..., :8] * self.mask[..., None]).reshape(B, -1)
+
+
+def canonical(app: apps_lib.AccelDef, config: Dict[str, int]
+              ) -> Tuple[int, ...]:
+    """Sort instance indices inside each symmetric group -> canonical key."""
+    cfg = dict(config)
+    for group in SYMMETRY.get(app.name, ()):
+        vals = sorted(cfg[g] for g in group)
+        for g, v in zip(group, vals):
+            cfg[g] = v
+    return tuple(cfg[n.id] for n in app.unit_nodes)
+
+
+def sample_configs(app: apps_lib.AccelDef, n: int, seed: int = 0,
+                   lib_entries: Optional[Dict[str, Sequence]] = None,
+                   dedup: bool = True) -> List[Tuple[int, ...]]:
+    rng = np.random.default_rng(seed)
+    entries = lib_entries or {k.kind: lib.build_library(k.kind)
+                              for k in app.unit_nodes}
+    sizes = [len(entries[k.kind]) for k in app.unit_nodes]
+    seen = set()
+    out: List[Tuple[int, ...]] = []
+    tries = 0
+    while len(out) < n and tries < 50 * n:
+        tries += 1
+        cfg = {node.id: int(rng.integers(0, s))
+               for node, s in zip(app.unit_nodes, sizes)}
+        key = canonical(app, cfg) if dedup else tuple(
+            cfg[node.id] for node in app.unit_nodes)
+        if dedup and key in seen:
+            continue
+        seen.add(key)
+        out.append(key if dedup else tuple(cfg[node.id]
+                                           for node in app.unit_nodes))
+    return out
+
+
+def build(app_name: str, n_samples: int = 2000, seed: int = 0,
+          n_images: int = 4, img_size: int = 64,
+          lib_entries: Optional[Dict[str, Sequence]] = None,
+          simplify_graph: bool = True, n_pad: int = 32) -> AccelDataset:
+    app = apps_lib.APPS[app_name]
+    g = graph_lib.build_graph(app, simplify=simplify_graph)
+    entries = lib_entries or {k: lib.build_library(k) for k in
+                              {n.kind for n in app.unit_nodes}}
+
+    imgs = images_lib.image_set(n_images, img_size)
+    if app_name == "kmeans":
+        inp = jnp.asarray(imgs.astype(np.int32))
+    else:
+        inp = jnp.asarray(images_lib.gray(imgs))
+    exact_out = app.run(apps_lib.make_impls(app, apps_lib.exact_choice(app)),
+                        inp)
+
+    configs = sample_configs(app, n_samples, seed, lib_entries=entries)
+    adjs, feats, ys, crits = [], [], [], []
+    for cfg_idx in configs:
+        choice = {node.id: entries[node.kind][i]
+                  for node, i in zip(app.unit_nodes, cfg_idx)}
+        rep = synth.synthesize(app, choice)
+        acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
+        xf = graph_lib.node_features(g, app, choice,
+                                     crit_nodes=rep["critical_nodes"])
+        crit_bits = xf[:, graph_lib.CRIT_IDX].copy()
+        xf[:, graph_lib.CRIT_IDX] = 0.0
+        adjs.append(g.adj)
+        feats.append(xf)
+        ys.append([rep["area"], rep["power"], rep["latency"], acc])
+        crits.append(crit_bits)
+
+    A, X, M = graph_lib.pad_batch(adjs, feats, n_pad)
+    y_raw = np.asarray(ys, np.float32)
+    crit = np.zeros((len(configs), n_pad), np.float32)
+    for i, c in enumerate(crits):
+        crit[i, :len(c)] = c
+    unit_mask = np.zeros_like(M)
+    unit_ids = {n.id for n in app.unit_nodes}
+    for j, nid in enumerate(g.node_ids):
+        if nid in unit_ids:
+            unit_mask[:, j] = 1.0
+    # normalize
+    y_mean, y_std = y_raw.mean(0), y_raw.std(0) + 1e-6
+    y = (y_raw - y_mean) / y_std
+    x_mean = X.reshape(-1, X.shape[-1]).mean(0)
+    x_std = X.reshape(-1, X.shape[-1]).std(0) + 1e-6
+    # one-hot + crit dims: leave unnormalized
+    x_mean[graph_lib.CRIT_IDX:] = 0.0
+    x_std[graph_lib.CRIT_IDX:] = 1.0
+    Xn = (X - x_mean) / x_std * M[..., None]
+    return AccelDataset(app_name, g, A, Xn, M, unit_mask, y, y_raw, crit,
+                        configs, y_mean, y_std, x_mean, x_std)
+
+
+def features_for_configs(ds: AccelDataset, app: apps_lib.AccelDef,
+                         entries: Dict[str, Sequence],
+                         configs: Sequence[Tuple[int, ...]]
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Surrogate-input tensors for arbitrary configs (DSE hot path)."""
+    g = ds.graph
+    adjs, feats = [], []
+    for cfg_idx in configs:
+        choice = {node.id: entries[node.kind][i]
+                  for node, i in zip(app.unit_nodes, cfg_idx)}
+        xf = graph_lib.node_features(g, app, choice, crit_nodes=None)
+        adjs.append(g.adj)
+        feats.append(xf)
+    A, X, M = graph_lib.pad_batch(adjs, feats, ds.x.shape[1])
+    Xn = (X - ds.x_mean) / ds.x_std * M[..., None]
+    return A, Xn, M

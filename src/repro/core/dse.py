@@ -1,0 +1,255 @@
+"""Design-space exploration (Sec III-C): NSGA-II, NSGA-III, random, TPE.
+
+The evaluator is pluggable: the GNN surrogate (fast path used by
+ApproxPilot), the random-forest baseline (AutoAX), or the synthesis oracle
+(ground truth, for validation). Objectives are minimized:
+    [area, power, latency, 1 - ssim]
+Restart-on-stagnation: if the parent population survives unchanged for
+`stagnation` generations, fresh random samples are injected (Sec III-C).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Config = Tuple[int, ...]
+EvalFn = Callable[[Sequence[Config]], np.ndarray]   # -> (n, n_obj)
+
+
+@dataclass
+class DSEResult:
+    pareto_configs: List[Config]
+    pareto_objs: np.ndarray
+    evaluated: int
+    history: List[int] = field(default_factory=list)
+
+
+# --------------------------------------------------------------------------
+# pareto utilities
+# --------------------------------------------------------------------------
+
+def non_dominated_sort(F: np.ndarray) -> List[np.ndarray]:
+    n = len(F)
+    dominated_by = [[] for _ in range(n)]
+    dom_count = np.zeros(n, np.int64)
+    for i in range(n):
+        less = np.all(F[i] <= F, axis=1)
+        strict = np.any(F[i] < F, axis=1)
+        dominates = less & strict
+        dominates[i] = False
+        idxs = np.where(dominates)[0]
+        for j in idxs:
+            dominated_by[i].append(j)
+        dom_count += dominates
+    fronts = []
+    current = np.where(dom_count == 0)[0]
+    while len(current):
+        fronts.append(current)
+        nxt = []
+        for i in current:
+            for j in dominated_by[i]:
+                dom_count[j] -= 1
+                if dom_count[j] == 0:
+                    nxt.append(j)
+        current = np.asarray(sorted(set(nxt)), np.int64)
+    return fronts
+
+
+def crowding_distance(F: np.ndarray) -> np.ndarray:
+    n, m = F.shape
+    d = np.zeros(n)
+    for k in range(m):
+        order = np.argsort(F[:, k])
+        d[order[0]] = d[order[-1]] = np.inf
+        rng = F[order[-1], k] - F[order[0], k] + 1e-12
+        d[order[1:-1]] += (F[order[2:], k] - F[order[:-2], k]) / rng
+    return d
+
+
+def pareto_front(configs: Sequence[Config], F: np.ndarray
+                 ) -> Tuple[List[Config], np.ndarray]:
+    fronts = non_dominated_sort(F)
+    idx = fronts[0] if fronts else np.arange(0)
+    # dedupe identical objective rows
+    seen, keep = set(), []
+    for i in idx:
+        key = tuple(np.round(F[i], 9))
+        if key not in seen:
+            seen.add(key)
+            keep.append(i)
+    return [configs[i] for i in keep], F[keep]
+
+
+# --------------------------------------------------------------------------
+# reference points for NSGA-III (Das-Dennis)
+# --------------------------------------------------------------------------
+
+def das_dennis(n_obj: int, divisions: int) -> np.ndarray:
+    pts = []
+    for c in itertools.combinations(range(divisions + n_obj - 1),
+                                    n_obj - 1):
+        prev = -1
+        coords = []
+        for x in c:
+            coords.append(x - prev - 1)
+            prev = x
+        coords.append(divisions + n_obj - 2 - prev)
+        pts.append([v / divisions for v in coords])
+    return np.asarray(pts, np.float64)
+
+
+def _niche_select(F: np.ndarray, need: int, refs: np.ndarray,
+                  rng: np.random.Generator) -> np.ndarray:
+    """NSGA-III niching on the last front."""
+    ideal = F.min(0)
+    span = F.max(0) - ideal + 1e-12
+    Fn = (F - ideal) / span
+    norm = np.linalg.norm(refs, axis=1, keepdims=True)
+    cos = Fn @ refs.T / (np.linalg.norm(Fn, axis=1, keepdims=True) + 1e-12) \
+        / norm.T
+    d = np.linalg.norm(Fn, axis=1, keepdims=True) * np.sqrt(
+        np.maximum(1 - cos ** 2, 0))
+    nearest = d.argmin(1)
+    chosen: List[int] = []
+    counts = np.zeros(len(refs), np.int64)
+    avail = set(range(len(F)))
+    while len(chosen) < need and avail:
+        r = int(np.argmin(counts))
+        members = [i for i in avail if nearest[i] == r]
+        if not members:
+            counts[r] = 1 << 30
+            continue
+        pick = min(members, key=lambda i: d[i, r])
+        chosen.append(pick)
+        avail.discard(pick)
+        counts[r] += 1
+    return np.asarray(chosen, np.int64)
+
+
+# --------------------------------------------------------------------------
+# genetic operators
+# --------------------------------------------------------------------------
+
+def _crossover_mutate(parents: np.ndarray, sizes: Sequence[int],
+                      rng: np.random.Generator, p_mut: float = 0.15
+                      ) -> np.ndarray:
+    n, d = parents.shape
+    perm = rng.permutation(n)
+    kids = parents[perm].copy()
+    for i in range(0, n - 1, 2):
+        mask = rng.random(d) < 0.5
+        a, b = kids[i].copy(), kids[i + 1].copy()
+        kids[i][mask] = b[mask]
+        kids[i + 1][mask] = a[mask]
+    mut = rng.random(kids.shape) < p_mut
+    rand = np.stack([rng.integers(0, s, n) for s in sizes], 1)
+    kids[mut] = rand[mut]
+    return kids
+
+
+# --------------------------------------------------------------------------
+# samplers
+# --------------------------------------------------------------------------
+
+def run_random(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+               seed: int = 0) -> DSEResult:
+    rng = np.random.default_rng(seed)
+    configs = [tuple(rng.integers(0, s) for s in sizes)
+               for _ in range(budget)]
+    F = evaluate(configs)
+    pc, po = pareto_front(configs, F)
+    return DSEResult(pc, po, budget)
+
+
+def run_tpe(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+            seed: int = 0, gamma: float = 0.25, batch: int = 64
+            ) -> DSEResult:
+    """Tree-structured-Parzen-lite for categorical spaces (the 'Bayesian'
+    sampler of Fig. 6): models P(dim=v | good) vs P(dim=v | bad) on a
+    scalarized objective and samples proportional to the ratio."""
+    rng = np.random.default_rng(seed)
+    X: List[Config] = [tuple(rng.integers(0, s) for s in sizes)
+                       for _ in range(min(batch, budget))]
+    F = evaluate(X)
+    while len(X) < budget:
+        scal = (F / (np.abs(F).max(0) + 1e-12)).sum(1)
+        order = np.argsort(scal)
+        n_good = max(2, int(gamma * len(X)))
+        good = order[:n_good]
+        probs = []
+        for d, s in enumerate(sizes):
+            cnt_g = np.bincount([X[i][d] for i in good], minlength=s) + 0.5
+            cnt_a = np.bincount([x[d] for x in X], minlength=s) + 0.5
+            p = (cnt_g / cnt_g.sum()) / (cnt_a / cnt_a.sum())
+            probs.append(p / p.sum())
+        newc = [tuple(rng.choice(s, p=probs[d])
+                      for d, s in enumerate(sizes))
+                for _ in range(min(batch, budget - len(X)))]
+        Fn = evaluate(newc)
+        X += newc
+        F = np.concatenate([F, Fn], 0)
+    pc, po = pareto_front(X, F)
+    return DSEResult(pc, po, budget)
+
+
+def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+             seed: int = 0, pop: int = 64, variant: str = "nsga3",
+             stagnation: int = 5, ref_divisions: int = 6) -> DSEResult:
+    rng = np.random.default_rng(seed)
+    P = np.stack([rng.integers(0, s, pop) for s in sizes], 1)
+    F = evaluate([tuple(r) for r in P])
+    evaluated = pop
+    refs = das_dennis(F.shape[1], ref_divisions)
+    archive_X: List[Config] = [tuple(r) for r in P]
+    archive_F = [F]
+    stale = 0
+    prev_key = None
+    while evaluated < budget:
+        Q = _crossover_mutate(P, sizes, rng)
+        FQ = evaluate([tuple(r) for r in Q])
+        evaluated += len(Q)
+        archive_X += [tuple(r) for r in Q]
+        archive_F.append(FQ)
+        R = np.concatenate([P, Q], 0)
+        FR = np.concatenate([F, FQ], 0)
+        fronts = non_dominated_sort(FR)
+        chosen: List[int] = []
+        for fr in fronts:
+            if len(chosen) + len(fr) <= pop:
+                chosen += list(fr)
+            else:
+                need = pop - len(chosen)
+                if variant == "nsga2":
+                    cd = crowding_distance(FR[fr])
+                    order = np.argsort(-cd)
+                    chosen += list(fr[order[:need]])
+                else:
+                    sel = _niche_select(FR[fr], need, refs, rng)
+                    chosen += list(fr[sel])
+                break
+        P = R[np.asarray(chosen)]
+        F = FR[np.asarray(chosen)]
+        key = tuple(sorted(map(tuple, P)))
+        if key == prev_key:
+            stale += 1
+            if stale >= stagnation:   # restart: inject fresh randoms
+                n_new = pop // 2
+                P[:n_new] = np.stack(
+                    [rng.integers(0, s, n_new) for s in sizes], 1)
+                F[:n_new] = evaluate([tuple(r) for r in P[:n_new]])
+                evaluated += n_new
+                stale = 0
+        else:
+            stale = 0
+        prev_key = key
+    allF = np.concatenate(archive_F, 0)
+    pc, po = pareto_front(archive_X, allF)
+    return DSEResult(pc, po, evaluated)
+
+
+SAMPLERS = {"random": run_random, "tpe": run_tpe,
+            "nsga2": lambda *a, **k: run_nsga(*a, variant="nsga2", **k),
+            "nsga3": lambda *a, **k: run_nsga(*a, variant="nsga3", **k)}

@@ -1,0 +1,110 @@
+"""GNN model zoo in pure JAX: GCN, GraphSAGE ("GSAE"), GAT, MPNN.
+
+Graphs are small (<= 32 nodes after merging), so we use batched DENSE
+adjacency — every layer is a batched matmul, which maps straight onto the
+MXU (and onto the Pallas fused message-passing kernel in repro.kernels.gnn_mp
+for the DSE inference hot loop).
+
+Paper setup: 5 layers, hidden 300 (Sec IV-A); both are configurable because
+CPU benchmark runs use reduced widths.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    arch: str = "gsae"             # gcn | gsae | gat | mpnn
+    n_layers: int = 5
+    hidden: int = 300
+    feature_dim: int = 21
+    out_dim: int = 1               # regression heads / node classes
+    readout: str = "meanmax"       # graph-level readout
+    node_level: bool = False       # True -> per-node logits (stage 1)
+    dropout: float = 0.1
+
+
+def _dense(key, fan_in, fan_out):
+    s = 1.0 / math.sqrt(fan_in)
+    return jax.random.uniform(key, (fan_in, fan_out), jnp.float32, -s, s)
+
+
+def init_params(key: jax.Array, cfg: GNNConfig) -> Dict:
+    keys = jax.random.split(key, cfg.n_layers * 4 + 4)
+    params: Dict = {"layers": []}
+    dim = cfg.feature_dim
+    for i in range(cfg.n_layers):
+        k0, k1, k2, k3 = keys[4 * i:4 * i + 4]
+        layer = {"w_self": _dense(k0, dim, cfg.hidden),
+                 "w_nbr": _dense(k1, dim, cfg.hidden),
+                 "b": jnp.zeros((cfg.hidden,), jnp.float32)}
+        if cfg.arch == "gat":
+            layer["attn_src"] = _dense(k2, cfg.hidden, 1)
+            layer["attn_dst"] = _dense(k3, cfg.hidden, 1)
+        if cfg.arch == "mpnn":
+            layer["w_msg"] = _dense(k2, 2 * dim, cfg.hidden)
+            layer["w_upd"] = _dense(k3, dim + cfg.hidden, cfg.hidden)
+        params["layers"].append(layer)
+        dim = cfg.hidden
+    ro_in = dim if cfg.node_level else 2 * dim
+    params["ro_w1"] = _dense(keys[-4], ro_in, cfg.hidden)
+    params["ro_b1"] = jnp.zeros((cfg.hidden,), jnp.float32)
+    params["ro_w2"] = _dense(keys[-3], cfg.hidden, cfg.out_dim)
+    params["ro_b2"] = jnp.zeros((cfg.out_dim,), jnp.float32)
+    return params
+
+
+def _layer(cfg: GNNConfig, lp: Dict, adj, h, mask):
+    """adj: (B,N,N) normalized; h: (B,N,D); mask: (B,N)."""
+    if cfg.arch == "gcn":
+        out = adj @ (h @ lp["w_nbr"]) + h @ lp["w_self"]
+    elif cfg.arch == "gsae":                 # GraphSAGE-mean
+        deg = jnp.maximum(adj.sum(-1, keepdims=True), 1e-6)
+        mean_nbr = (adj @ h) / deg
+        out = h @ lp["w_self"] + mean_nbr @ lp["w_nbr"]
+    elif cfg.arch == "gat":
+        hs = h @ lp["w_nbr"]
+        a_src = (hs @ lp["attn_src"])        # (B,N,1)
+        a_dst = (hs @ lp["attn_dst"])
+        logits = jax.nn.leaky_relu(a_src + a_dst.transpose(0, 2, 1), 0.2)
+        logits = jnp.where(adj > 0, logits, -1e30)
+        alpha = jax.nn.softmax(logits, axis=-1)
+        alpha = jnp.where(adj > 0, alpha, 0.0)
+        out = alpha @ hs + h @ lp["w_self"]
+    elif cfg.arch == "mpnn":
+        B, N, D = h.shape
+        hi = jnp.broadcast_to(h[:, :, None, :], (B, N, N, D))
+        hj = jnp.broadcast_to(h[:, None, :, :], (B, N, N, D))
+        msg = jax.nn.relu(jnp.concatenate([hi, hj], -1) @ lp["w_msg"])
+        agg = (msg * adj[..., None]).sum(2)
+        out = jnp.concatenate([h, agg], -1) @ lp["w_upd"]
+    else:
+        raise ValueError(cfg.arch)
+    out = out + lp["b"]
+    return jax.nn.relu(out) * mask[..., None]
+
+
+def apply(cfg: GNNConfig, params: Dict, adj, x, mask, *, rng=None):
+    """Returns (B, N, out) for node-level or (B, out) for graph-level."""
+    h = x * mask[..., None]
+    for i, lp in enumerate(params["layers"]):
+        h = _layer(cfg, lp, adj, h, mask)
+        if rng is not None and cfg.dropout > 0:
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h.shape)
+            h = h * keep / (1 - cfg.dropout)
+    if cfg.node_level:
+        out = jax.nn.relu(h @ params["ro_w1"] + params["ro_b1"])
+        return out @ params["ro_w2"] + params["ro_b2"]
+    denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+    mean = (h * mask[..., None]).sum(1) / denom
+    mx = jnp.where(mask[..., None] > 0, h, -1e30).max(1)
+    g = jnp.concatenate([mean, mx], -1)
+    g = jax.nn.relu(g @ params["ro_w1"] + params["ro_b1"])
+    return g @ params["ro_w2"] + params["ro_b2"]

@@ -1,0 +1,145 @@
+"""Graph abstraction of approximate accelerators (Fig. 2 of the paper).
+
+Each arithmetic-unit instance is a node; physical connections are edges.
+Fixed components (memories, dividers, comparators...) are abstracted by
+function and *merged* when, after abstraction, they share the same
+incoming-neighbour set and outgoing-neighbour kinds — iterated to fixpoint,
+which reproduces the paper's two-stage simplification (center mems + divs
+collapse in kmeans).
+
+The GNN consumes batched dense tensors: adjacency (B,N,N) with symmetric
+normalization, features (B,N,F), mask (B,N).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.accel import library as lib
+from repro.accel.apps import AccelDef, Node
+
+# node-kind vocabulary for the one-hot feature (Table I "Compute Type")
+KIND_VOCAB = ("add8", "add12", "add16", "sub10", "mul8", "mul8x4", "sqrt18",
+              "mem", "div", "cmp", "abs", "shift")
+
+# feature layout:
+#   [area, power, latency, mae, mre, mse, wce, approx_level,
+#    on_critical_path, onehot(kind)...]
+N_BASE = 9
+FEATURE_DIM = N_BASE + len(KIND_VOCAB)
+CRIT_IDX = 8
+
+
+@dataclass(frozen=True)
+class SimpleGraph:
+    node_ids: Tuple[str, ...]
+    kinds: Tuple[str, ...]
+    fixed: Tuple[bool, ...]
+    adj: np.ndarray           # (N,N) 0/1, directed
+    merged_from: Tuple[Tuple[str, ...], ...]
+
+
+def build_graph(app: AccelDef, simplify: bool = True) -> SimpleGraph:
+    ids = [n.id for n in app.nodes]
+    kind = {n.id: n.kind for n in app.nodes}
+    fixed = {n.id: n.fixed for n in app.nodes}
+    preds: Dict[str, set] = {i: set() for i in ids}
+    succs: Dict[str, set] = {i: set() for i in ids}
+    for u, v in app.edges:
+        preds[v].add(u)
+        succs[u].add(v)
+
+    groups = {i: (i,) for i in ids}
+    if simplify:
+        changed = True
+        while changed:
+            changed = False
+            sig: Dict[tuple, List[str]] = {}
+            for i in ids:
+                if not fixed[i]:
+                    continue
+                s = (kind[i], frozenset(preds[i]),
+                     frozenset(kind[x] for x in succs[i]))
+                sig.setdefault(s, []).append(i)
+            for same in sig.values():
+                if len(same) < 2:
+                    continue
+                keep, rest = same[0], same[1:]
+                for r in rest:
+                    for p in preds[r]:
+                        succs[p].discard(r)
+                        succs[p].add(keep)
+                        preds[keep].add(p)
+                    for s_ in succs[r]:
+                        preds[s_].discard(r)
+                        preds[s_].add(keep)
+                        succs[keep].add(s_)
+                    ids.remove(r)
+                    groups[keep] = groups[keep] + groups[r]
+                    del groups[r], preds[r], succs[r]
+                changed = True
+
+    n = len(ids)
+    idx = {i: k for k, i in enumerate(ids)}
+    adj = np.zeros((n, n), np.float32)
+    for i in ids:
+        for s_ in succs[i]:
+            if s_ in idx:
+                adj[idx[i], idx[s_]] = 1.0
+    return SimpleGraph(tuple(ids), tuple(kind[i] for i in ids),
+                       tuple(fixed[i] for i in ids), adj,
+                       tuple(groups[i] for i in ids))
+
+
+def normalized_adjacency(adj: np.ndarray) -> np.ndarray:
+    """Symmetric-normalized adjacency with self loops: D^-1/2 (A+A^T+I) D^-1/2."""
+    a = adj + adj.T + np.eye(adj.shape[0], dtype=np.float32)
+    a = np.minimum(a, 1.0)
+    d = a.sum(-1)
+    dinv = 1.0 / np.sqrt(np.maximum(d, 1e-6))
+    return (a * dinv[:, None]) * dinv[None, :]
+
+
+def node_features(graph: SimpleGraph, app: AccelDef,
+                  choice: Dict[str, lib.LibEntry],
+                  crit_nodes: set | None = None,
+                  node_ppa: Dict[str, Dict[str, float]] | None = None
+                  ) -> np.ndarray:
+    """(N, FEATURE_DIM) float32. crit_nodes=None -> crit bit left at 0
+    (stage-1 input); ground-truth labels come from synth."""
+    from repro.accel.synth import _FIXED_PPA
+    out = np.zeros((len(graph.node_ids), FEATURE_DIM), np.float32)
+    for i, nid in enumerate(graph.node_ids):
+        k = graph.kinds[i]
+        if graph.fixed[i]:
+            pp = _FIXED_PPA[k]
+            base = [pp["area"], pp["power"], pp["latency"],
+                    0.0, 0.0, 0.0, 0.0, 0.0]
+        else:
+            e = choice[nid]
+            base = [e.area, e.power, e.latency, e.mae, e.mre, e.mse, e.wce,
+                    float(e.inst.level)]
+        out[i, :8] = base
+        if crit_nodes is not None:
+            # merged fixed nodes: critical if any member is critical
+            members = graph.merged_from[i]
+            out[i, CRIT_IDX] = float(any(m in crit_nodes for m in members))
+        out[i, N_BASE + KIND_VOCAB.index(k)] = 1.0
+    return out
+
+
+def pad_batch(graphs: Sequence[np.ndarray], feats: Sequence[np.ndarray],
+              n_pad: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """-> (adj (B,N,N) normalized, x (B,N,F), mask (B,N))."""
+    B = len(graphs)
+    A = np.zeros((B, n_pad, n_pad), np.float32)
+    X = np.zeros((B, n_pad, feats[0].shape[-1]), np.float32)
+    M = np.zeros((B, n_pad), np.float32)
+    for b, (a, x) in enumerate(zip(graphs, feats)):
+        n = a.shape[0]
+        A[b, :n, :n] = normalized_adjacency(a)
+        X[b, :n] = x
+        M[b, :n] = 1.0
+    return A, X, M

@@ -1,0 +1,196 @@
+"""ApproxPilot-LM: the paper's technique applied to the LM framework itself
+(beyond-paper extension, DESIGN.md SBeyond).
+
+The transformer step is itself an "accelerator": a dataflow graph of
+coarse ops (embed, qkv, attention, out-proj, mlp/moe, lm-head) where each
+op picks an arithmetic precision from {bf16, fp8, int8} — a design space
+isomorphic to the paper's approximate-unit selection. The same two-stage
+GNN predicts (step_time, hbm_bytes, quality_penalty) and the critical-path
+stage predicts which op dominates the roofline (the "latency = critical
+path" insight transfers: per-op time = max(compute, memory) term, and the
+step bottleneck is the argmax op).
+
+The oracle is the v5e roofline cost model fed by per-op FLOPs/bytes derived
+from the arch config (cross-checked against the dry-run HLO profile).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.roofline import PEAK_FLOPS, HBM_BW
+
+# precision options: (flops multiplier vs bf16 peak, bytes multiplier,
+# quality penalty per op in "approx-units" — literature-informed relative
+# sensitivities, attention/lm-head most sensitive)
+PRECISIONS = ("bf16", "fp8", "int8")
+_SPEED = {"bf16": 1.0, "fp8": 2.0, "int8": 2.0}
+_BYTES = {"bf16": 1.0, "fp8": 0.5, "int8": 0.5}
+_SENS = {"embed": 0.2, "qkv": 0.6, "attn": 1.5, "out": 0.6,
+         "mlp_in": 0.4, "mlp_out": 0.5, "moe": 0.7, "head": 2.0}
+_PENALTY = {"bf16": 0.0, "fp8": 1.0, "int8": 2.5}
+
+OP_CLASSES = ("embed", "qkv", "attn", "out", "mlp_in", "mlp_out", "head")
+
+
+def op_graph(cfg: ArchConfig, shape: ShapeConfig, n_devices: int = 256
+             ) -> Tuple[List[Dict], np.ndarray]:
+    """Per-op [flops, bytes] for one (micro)batch step on one device."""
+    B = max(shape.global_batch // max(n_devices // 16, 1), 1)
+    S = shape.seq_len
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    # decode processes ONE new token per sequence (KV cache of length S)
+    T = B if shape.kind == "decode" else B * S
+    mult = 6 if shape.kind == "train" else 2        # fwd+bwd vs fwd
+    ops = []
+
+    emb_bytes = T * d * 2 + cfg.vocab_size * d * 2 / max(L, 1)
+    ops.append({"name": "embed", "f": 2 * T * d, "b": emb_bytes,
+                "fanin": []})
+    ops.append({"name": "qkv",
+                "f": L * 2 * T * d * (H + 2 * KV) * hd,
+                "b": L * (T * d * 2 + d * (H + 2 * KV) * hd * 2),
+                "fanin": ["embed"]})
+    sk = min(S, cfg.swa_window) if cfg.swa_window else S
+    q_len = 1 if shape.kind == "decode" else S
+    # decode attention also re-reads the whole KV cache from HBM
+    cache_bytes = (B * sk * 2 * KV * hd * 2 * L
+                   if shape.kind == "decode" else 0)
+    ops.append({"name": "attn", "f": L * 4 * B * q_len * sk * H * hd,
+                "b": L * T * (H + 2 * KV) * hd * 2 + cache_bytes,
+                "fanin": ["qkv"]})
+    ops.append({"name": "out", "f": L * 2 * T * H * hd * d,
+                "b": L * (T * d * 2 + H * hd * d * 2), "fanin": ["attn"]})
+    eff_f = cfg.top_k * cfg.expert_d_ff if cfg.is_moe else f
+    ops.append({"name": "mlp_in", "f": L * 4 * T * d * eff_f,
+                "b": L * (T * d * 2 + 2 * d * eff_f * 2),
+                "fanin": ["out"]})
+    ops.append({"name": "mlp_out", "f": L * 2 * T * eff_f * d,
+                "b": L * (T * eff_f * 2 + eff_f * d * 2),
+                "fanin": ["mlp_in"]})
+    ops.append({"name": "head", "f": 2 * T * d * cfg.vocab_size,
+                "b": T * cfg.vocab_size * 2 + d * cfg.vocab_size * 2,
+                "fanin": ["mlp_out"]})
+    scale = mult / 2.0
+    for o in ops:
+        o["f"] *= scale
+        o["b"] *= scale
+
+    names = [o["name"] for o in ops]
+    adj = np.zeros((len(ops), len(ops)), np.float32)
+    for j, o in enumerate(ops):
+        for src in o["fanin"]:
+            adj[names.index(src), j] = 1.0
+    return ops, adj
+
+
+def oracle(cfg: ArchConfig, shape: ShapeConfig, ops: List[Dict]):
+    """evaluate(configs) -> (step_time_s, hbm_gb, penalty) + critical op."""
+    def evaluate_one(choice: Sequence[int]):
+        times, bytes_tot, pen = [], 0.0, 0.0
+        for o, ci in zip(ops, choice):
+            p = PRECISIONS[ci]
+            t_c = o["f"] / (PEAK_FLOPS * _SPEED[p])
+            b = o["b"] * _BYTES[p]
+            t_m = b / HBM_BW
+            times.append(max(t_c, t_m))
+            bytes_tot += b
+            pen += _SENS.get(o["name"], 0.5) * _PENALTY[p]
+        step_time = sum(times)
+        crit = int(np.argmax(times))
+        return (step_time, bytes_tot / 1e9, pen), crit
+
+    def evaluate(configs):
+        return np.asarray([evaluate_one(c)[0] for c in configs], np.float64)
+
+    return evaluate, evaluate_one
+
+
+def train_surrogate(cfg: ArchConfig, shape: ShapeConfig, n_samples: int = 400,
+                    epochs: int = 30, seed: int = 0):
+    """Train the paper's two-stage GNN on the LM op-graph design space:
+    stage 1 classifies the roofline-critical op ("critical path" transfer),
+    stage 2 regresses [step_time, hbm_gb, penalty, 0]. Returns (metrics,
+    predict_fn) — demonstrating the full ApproxPilot model, not just its
+    DSE, on the LM framework."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import gnn, models, training
+    from repro.core.graph import normalized_adjacency
+
+    ops, adj = op_graph(cfg, shape)
+    _, evaluate_one = oracle(cfg, shape, ops)
+    n_ops = len(ops)
+    rng = np.random.default_rng(seed)
+    A1 = normalized_adjacency(adj)
+
+    # features: [log flops, log bytes, onehot(op), onehot(precision)]
+    def feats(choice):
+        x = np.zeros((n_ops, 2 + n_ops + len(PRECISIONS)), np.float32)
+        for i, (o, c) in enumerate(zip(ops, choice)):
+            x[i, 0] = np.log10(max(o["f"], 1.0))
+            x[i, 1] = np.log10(max(o["b"], 1.0))
+            x[i, 2 + i] = 1.0
+            x[i, 2 + n_ops + c] = 1.0
+        return x
+
+    X, Y, C = [], [], []
+    for _ in range(n_samples):
+        choice = tuple(rng.integers(0, len(PRECISIONS), n_ops))
+        (t, hbm, pen), crit = evaluate_one(choice)
+        X.append(feats(choice))
+        Y.append([np.log10(t), np.log10(max(hbm, 1e-9)), pen, 0.0])
+        C.append(np.eye(n_ops, dtype=np.float32)[crit])
+    X = np.stack(X)
+    Y = np.asarray(Y, np.float32)
+    C = np.stack(C)
+    ymu, ysd = Y.mean(0), Y.std(0) + 1e-6
+    Yn = (Y - ymu) / ysd
+    A = np.broadcast_to(A1, (len(X), n_ops, n_ops)).copy()
+    M = np.ones((len(X), n_ops), np.float32)
+
+    import dataclasses as _dc
+    from repro.core.dataset import AccelDataset
+    ds = AccelDataset("lm_bridge", None, A, X, M, M, Yn, Y, C,
+                      [tuple()] * len(X), ymu, ysd,
+                      np.zeros(X.shape[-1]), np.ones(X.shape[-1]))
+    tr, te = ds.split(0.9)
+    two = models.TwoStageConfig(gnn=gnn.GNNConfig(
+        arch="gsae", n_layers=3, hidden=64, feature_dim=X.shape[-1]))
+    params = training.fit_two_stage(two, tr,
+                                    training.TrainConfig(epochs=epochs))
+    metrics = training.evaluate(two, params, ds, te)
+
+    def predict(choices):
+        Xq = np.stack([feats(c) for c in choices])
+        Aq = np.broadcast_to(A1, (len(Xq), n_ops, n_ops)).copy()
+        Mq = np.ones((len(Xq), n_ops), np.float32)
+        y, _ = models.predict(two, params, jnp.asarray(Aq),
+                              jnp.asarray(Xq), jnp.asarray(Mq))
+        return ds.denorm_y(np.asarray(y))
+
+    return metrics, predict
+
+
+def run_dse(cfg: ArchConfig, shape: ShapeConfig, budget: int = 1500,
+            seed: int = 0, max_penalty: float = 6.0):
+    """NSGA-III over per-op precisions; returns the Pareto front filtered by
+    the quality constraint, plus the bf16 baseline for comparison."""
+    from repro.core import dse
+    ops, _adj = op_graph(cfg, shape)
+    evaluate, evaluate_one = oracle(cfg, shape, ops)
+    sizes = [len(PRECISIONS)] * len(ops)
+    res = dse.run_nsga(sizes, evaluate, budget, seed=seed, pop=48)
+    base, crit = evaluate_one([0] * len(ops))
+    feasible = [(c, o) for c, o in zip(res.pareto_configs, res.pareto_objs)
+                if o[2] <= max_penalty]
+    feasible.sort(key=lambda co: co[1][0])
+    return {"ops": [o["name"] for o in ops],
+            "baseline": {"time": base[0], "hbm_gb": base[1],
+                         "critical_op": ops[crit]["name"]},
+            "pareto": feasible,
+            "best": feasible[0] if feasible else None}

@@ -1,0 +1,91 @@
+"""Two-stage critical-path-aware prediction model (Fig. 3 of the paper).
+
+Stage 1 — node-level classification: a GNN predicts, per arithmetic unit,
+whether it lies on the accelerator's critical path (labels come from the
+synthesis oracle for free, as in the paper).
+
+Stage 2 — graph-level regression: the predicted critical-path bit is
+written into the node feature vector (CRIT_IDX) and a second GNN regresses
+[area, power, latency, ssim]. During training stage 2 is teacher-forced
+with ground-truth bits; at inference it consumes stage-1 predictions.
+
+A `baseline` flag trains stage 2 alone with the crit bit zeroed — the
+single-stage GNN the paper ablates against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gnn
+from repro.core.graph import CRIT_IDX
+
+TARGETS = ("area", "power", "latency", "ssim")
+
+
+@dataclass(frozen=True)
+class TwoStageConfig:
+    gnn: gnn.GNNConfig = gnn.GNNConfig()
+    use_critical_path: bool = True
+
+    @property
+    def stage1(self) -> gnn.GNNConfig:
+        return replace(self.gnn, node_level=True, out_dim=1)
+
+    @property
+    def stage2(self) -> gnn.GNNConfig:
+        return replace(self.gnn, node_level=False, out_dim=len(TARGETS))
+
+
+class TwoStageParams(NamedTuple):
+    stage1: Dict
+    stage2: Dict
+
+
+def init(key: jax.Array, cfg: TwoStageConfig) -> TwoStageParams:
+    k1, k2 = jax.random.split(key)
+    return TwoStageParams(gnn.init_params(k1, cfg.stage1),
+                          gnn.init_params(k2, cfg.stage2))
+
+
+def predict_critical(cfg: TwoStageConfig, params: TwoStageParams,
+                     adj, x, mask) -> jax.Array:
+    """(B,N) logits for on-critical-path."""
+    logits = gnn.apply(cfg.stage1, params.stage1, adj, x, mask)
+    return logits[..., 0]
+
+
+def predict(cfg: TwoStageConfig, params: TwoStageParams, adj, x, mask,
+            teacher_crit=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (targets (B,4), crit_logits (B,N)).
+
+    x must arrive with the crit feature zeroed; it is filled here from
+    stage 1 (or from `teacher_crit` during stage-2 training)."""
+    crit_logits = predict_critical(cfg, params, adj, x, mask)
+    if not cfg.use_critical_path:
+        bit = jnp.zeros_like(crit_logits)
+    elif teacher_crit is not None:
+        bit = teacher_crit
+    else:
+        bit = (jax.nn.sigmoid(crit_logits) > 0.5).astype(x.dtype)
+    x2 = x.at[..., CRIT_IDX].set(bit * mask)
+    y = gnn.apply(cfg.stage2, params.stage2, adj, x2, mask)
+    return y, crit_logits
+
+
+def losses(cfg: TwoStageConfig, params: TwoStageParams, batch
+           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: {adj, x (crit zeroed), mask, y (B,4), crit (B,N), unit_mask}."""
+    y_pred, crit_logits = predict(cfg, params, batch["adj"], batch["x"],
+                                  batch["mask"],
+                                  teacher_crit=batch["crit"])
+    reg = jnp.mean((y_pred - batch["y"]) ** 2)
+    um = batch.get("unit_mask", batch["mask"])
+    bce = jnp.sum(um * (jnp.logaddexp(0.0, crit_logits)
+                        - crit_logits * batch["crit"])) / \
+        jnp.maximum(um.sum(), 1.0)
+    total = reg + (bce if cfg.use_critical_path else 0.0)
+    return total, {"reg_mse": reg, "crit_bce": bce}

@@ -1,0 +1,199 @@
+"""ApproxPilot end-to-end pipeline (Fig. 1):
+
+   library -> design-space pruning -> dataset construction ->
+   two-stage GNN PPA/accuracy models -> NSGA-III DSE -> Pareto front
+   (+ oracle validation of selected points).
+
+`surrogate="rf"` swaps in the AutoAX random-forest baseline on the same
+pruned space — both frameworks are first-class so every paper table has a
+benchmark entry.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accel import apps as apps_lib
+from repro.accel import library as lib
+from repro.accel import synth
+from repro.core import dataset as ds_lib
+from repro.core import dse, gnn, models, pruning, training
+from repro.core.rforest import RandomForest
+from repro.data import images as images_lib
+
+OBJ_NAMES = ("area", "power", "latency", "1-ssim")
+
+
+@dataclass
+class PipelineConfig:
+    app: str = "sobel"
+    n_samples: int = 1500
+    theta: float = 0.15
+    gnn_arch: str = "gsae"
+    hidden: int = 96
+    n_layers: int = 3
+    epochs: int = 30
+    dse_budget: int = 2000
+    dse_pop: int = 64
+    sampler: str = "nsga3"
+    seed: int = 0
+    use_critical_path: bool = True
+    surrogate: str = "gnn"          # gnn | rf | oracle
+
+    @staticmethod
+    def paper_faithful(app: str) -> "PipelineConfig":
+        n = {"sobel": 55_000, "gaussian": 105_000, "kmeans": 105_000}[app]
+        return PipelineConfig(app=app, n_samples=n, hidden=300, n_layers=5,
+                              epochs=100, dse_budget=20_000)
+
+
+@dataclass
+class PipelineResult:
+    cfg: PipelineConfig
+    pruned_sizes: Dict[str, Dict]
+    space: Dict[str, float]
+    metrics: Dict[str, Dict]
+    pareto_configs: List[Tuple[int, ...]]
+    pareto_objs: np.ndarray
+    timings: Dict[str, float]
+    dataset: object
+    predictor: Callable
+
+
+def _oracle_eval(app, entries, inp, exact_out):
+    def evaluate(configs: Sequence[Tuple[int, ...]]) -> np.ndarray:
+        out = []
+        for c in configs:
+            choice = {node.id: entries[node.kind][i]
+                      for node, i in zip(app.unit_nodes, c)}
+            rep = synth.synthesize(app, choice)
+            acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
+            out.append([rep["area"], rep["power"], rep["latency"], 1 - acc])
+        return np.asarray(out, np.float64)
+    return evaluate
+
+
+def run(cfg: PipelineConfig, verbose: bool = False) -> PipelineResult:
+    t: Dict[str, float] = {}
+    app = apps_lib.APPS[cfg.app]
+
+    t0 = time.time()
+    pruned, report = pruning.prune_library(theta=cfg.theta)
+    entries = {k: pruned[k] for k in {n.kind for n in app.unit_nodes}}
+    space = pruning.space_sizes(app, report)
+    t["prune"] = time.time() - t0
+
+    t0 = time.time()
+    ds = ds_lib.build(cfg.app, n_samples=cfg.n_samples, seed=cfg.seed,
+                      lib_entries=entries)
+    tr, te = ds.split(0.9)
+    t["dataset"] = time.time() - t0
+
+    t0 = time.time()
+    two_cfg = models.TwoStageConfig(
+        gnn=gnn.GNNConfig(arch=cfg.gnn_arch, n_layers=cfg.n_layers,
+                          hidden=cfg.hidden,
+                          feature_dim=ds.x.shape[-1]),
+        use_critical_path=cfg.use_critical_path)
+    rf_models: Dict[int, RandomForest] = {}
+    if cfg.surrogate == "gnn":
+        params = training.fit_two_stage(
+            two_cfg, tr, training.TrainConfig(epochs=cfg.epochs,
+                                              seed=cfg.seed),
+            log_every=0 if not verbose else 10)
+        metrics = training.evaluate(two_cfg, params, ds, te)
+    elif cfg.surrogate == "rf":
+        Xf_tr, Xf_te = tr.flat_features(), te.flat_features()
+        metrics = {}
+        for i, tname in enumerate(models.TARGETS):
+            rf = RandomForest(seed=cfg.seed + i).fit(Xf_tr, tr.y[:, i])
+            rf_models[i] = rf
+            pred = rf.predict(Xf_te) * ds.y_std[i] + ds.y_mean[i]
+            metrics[tname] = {
+                "r2": training.r2_score(te.y_raw[:, i], pred),
+                "mape": training.mape(te.y_raw[:, i], pred)}
+        params = None
+    else:
+        params, metrics = None, {}
+    t["train"] = time.time() - t0
+
+    # ---- surrogate evaluator for DSE ----
+    imgs = images_lib.image_set(4, 64)
+    if cfg.app == "kmeans":
+        inp = jnp.asarray(imgs.astype(np.int32))
+    else:
+        inp = jnp.asarray(images_lib.gray(imgs))
+    exact_out = app.run(apps_lib.make_impls(app, apps_lib.exact_choice(app)),
+                        inp)
+
+    if cfg.surrogate == "oracle":
+        evaluate = _oracle_eval(app, entries, inp, exact_out)
+        predictor = evaluate
+    elif cfg.surrogate == "rf":
+        def evaluate(configs):
+            rows = []
+            for c in configs:
+                choice = {node.id: entries[node.kind][i]
+                          for node, i in zip(app.unit_nodes, c)}
+                xf = np.zeros((ds.x.shape[1], 8), np.float32)
+                from repro.core.graph import node_features
+                f = node_features(ds.graph, app, choice)[:, :8]
+                xf[:len(f)] = f
+                rows.append(((xf - ds.x_mean[:8]) / ds.x_std[:8]).reshape(-1))
+            X = np.asarray(rows, np.float32)
+            preds = np.stack([rf_models[i].predict(X) * ds.y_std[i]
+                              + ds.y_mean[i] for i in range(4)], 1)
+            preds[:, 3] = 1 - preds[:, 3]
+            return preds
+        predictor = evaluate
+    else:
+        jit_predict = jax.jit(lambda a, x, m: models.predict(
+            two_cfg, params, a, x, m)[0])
+
+        def evaluate(configs):
+            A, X, M = ds_lib.features_for_configs(ds, app, entries, configs)
+            y = np.asarray(jit_predict(jnp.asarray(A), jnp.asarray(X),
+                                       jnp.asarray(M)))
+            y = ds.denorm_y(y)
+            y[:, 3] = 1 - y[:, 3]       # ssim -> 1-ssim (minimize)
+            return y
+        predictor = evaluate
+
+    t0 = time.time()
+    sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+    sampler = dse.SAMPLERS[cfg.sampler]
+    res = sampler(sizes, evaluate, cfg.dse_budget, seed=cfg.seed,
+                  pop=cfg.dse_pop) if cfg.sampler.startswith("nsga") else \
+        sampler(sizes, evaluate, cfg.dse_budget, seed=cfg.seed)
+    t["dse"] = time.time() - t0
+
+    return PipelineResult(cfg, report, space, metrics, res.pareto_configs,
+                          res.pareto_objs, t, ds, predictor)
+
+
+def validate_pareto(result: PipelineResult, k: int = 10) -> Dict[str, float]:
+    """Oracle-check k Pareto points: surrogate error on selected designs."""
+    cfg = result.cfg
+    app = apps_lib.APPS[cfg.app]
+    pruned, _ = pruning.prune_library(theta=cfg.theta)
+    entries = {kk: pruned[kk] for kk in {n.kind for n in app.unit_nodes}}
+    imgs = images_lib.image_set(4, 64)
+    inp = jnp.asarray(imgs.astype(np.int32)) if cfg.app == "kmeans" \
+        else jnp.asarray(images_lib.gray(imgs))
+    exact_out = app.run(apps_lib.make_impls(app, apps_lib.exact_choice(app)),
+                        inp)
+    oracle = _oracle_eval(app, entries, inp, exact_out)
+    sel = result.pareto_configs[:k]
+    if not sel:
+        return {"mean_rel_err": float("nan")}
+    true = oracle(sel)
+    pred = result.pareto_objs[:len(sel)]
+    rel = np.abs(pred - true) / np.maximum(np.abs(true), 1e-6)
+    return {"mean_rel_err": float(rel.mean()),
+            "per_obj": {n: float(rel[:, i].mean())
+                        for i, n in enumerate(OBJ_NAMES)}}

@@ -1,0 +1,57 @@
+"""Deterministic synthetic token pipeline.
+
+Stands in for a tokenized-corpus reader with the same interface a real
+deployment uses: stateless `batch_at(step)` indexing (so restart/elastic
+rescale replays exactly), per-shard slicing, and a learnable structure
+(noisy affine bigram process) so training loss measurably decreases in the
+end-to-end examples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed << 20) ^ step)
+
+    def batch_at(self, step: int, extras: Optional[Dict] = None
+                 ) -> Dict[str, np.ndarray]:
+        """Deterministic batch for `step` (restart-safe)."""
+        rng = self._rng(step)
+        B, S, V = self.global_batch, self.seq_len, self.vocab_size
+        a = 31 % V or 1
+        start = rng.integers(0, V, (B, 1))
+        noise = rng.integers(0, max(V // 64, 2), (B, S))
+        idx = np.arange(S)[None, :]
+        toks = (start * (a ** 0) + 0)
+        # affine-bigram walk: t_{i+1} = (a * t_i + eps) mod V
+        toks = np.empty((B, S), np.int64)
+        toks[:, 0] = start[:, 0]
+        for i in range(1, S):
+            toks[:, i] = (a * toks[:, i - 1] + noise[:, i]) % V
+        tokens = toks.astype(np.int32)
+        labels = np.concatenate([tokens[:, 1:],
+                                 np.full((B, 1), -1, np.int32)], 1)
+        out = {"tokens": tokens, "labels": labels}
+        if extras:
+            for k, sds in extras.items():
+                if k in out:
+                    continue
+                if np.issubdtype(np.dtype(sds.dtype), np.integer):
+                    out[k] = rng.integers(
+                        0, max(self.seq_len, 2), sds.shape).astype(sds.dtype)
+                else:
+                    out[k] = rng.standard_normal(sds.shape).astype(sds.dtype)
+        return out

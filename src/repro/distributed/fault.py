@@ -1,0 +1,99 @@
+"""Fault tolerance + straggler mitigation + elastic scaling plan.
+
+Single-process JAX cannot lose a real TPU host, so failures are modeled
+exactly where a 1000-node deployment would detect them:
+
+  * FaultInjector      — deterministic step-indexed faults (host crash,
+                         NaN corruption, straggler stall) for tests and the
+                         train-loop recovery drill;
+  * HealthMonitor      — per-step wall-time EWMA; a step slower than
+                         `straggler_factor` x EWMA flags a straggler, which
+                         at scale triggers hot-spare swap / rebalancing and
+                         here is logged + counted (train.py reacts by
+                         re-dispatching the step);
+  * elastic_plan       — given the devices that survive, returns the new
+                         mesh shape + the batch/accum re-split so the global
+                         batch is preserved (restore goes through
+                         checkpointing.restore with the new shardings).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class HostFailure(RuntimeError):
+    pass
+
+
+class StragglerStall(RuntimeError):
+    pass
+
+
+@dataclass
+class FaultInjector:
+    crash_at: Sequence[int] = ()
+    nan_at: Sequence[int] = ()
+    stall_at: Sequence[int] = ()
+    stall_seconds: float = 0.2
+    fired: set = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.crash_at and ("crash", step) not in self.fired:
+            self.fired.add(("crash", step))
+            raise HostFailure(f"injected host failure at step {step}")
+        if step in self.stall_at and ("stall", step) not in self.fired:
+            self.fired.add(("stall", step))
+            time.sleep(self.stall_seconds)
+
+    def corrupt(self, step: int) -> bool:
+        if step in self.nan_at and ("nan", step) not in self.fired:
+            self.fired.add(("nan", step))
+            return True
+        return False
+
+
+@dataclass
+class HealthMonitor:
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+    ewma: Optional[float] = None
+    stragglers: List[int] = field(default_factory=list)
+    step_times: List[float] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.step_times.append(dt)
+        is_straggler = (self.ewma is not None
+                        and dt > self.straggler_factor * self.ewma
+                        and len(self.step_times) > 3)
+        if is_straggler:
+            self.stragglers.append(step)
+        else:  # stragglers don't poison the baseline
+            self.ewma = dt if self.ewma is None else \
+                (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * dt
+        return is_straggler
+
+
+def elastic_plan(n_devices: int, global_batch: int,
+                 prefer_model: int = 16) -> Dict[str, int]:
+    """Mesh + batch plan for a changed device count (elastic scaling).
+
+    Keeps the model axis as close to `prefer_model` as divisibility allows
+    and preserves the global batch via grad accumulation."""
+    model = 1
+    for m in range(min(prefer_model, n_devices), 0, -1):
+        if n_devices % m == 0:
+            model = m
+            break
+    data = n_devices // model
+    accum = 1
+    while global_batch % (data * accum) != 0 or \
+            global_batch // (data * accum) > 64:
+        accum += 1
+        if accum > global_batch:
+            accum = 1
+            break
+    return {"data": data, "model": model, "grad_accum": accum,
+            "per_shard_batch": global_batch // max(data, 1)}

@@ -1,0 +1,98 @@
+"""Pallas kernel: causal flash attention with native GQA.
+
+TPU adaptation of the FlashAttention algorithm: instead of a CUDA
+thread-block per (head, q-tile) with shared-memory staging, we express a
+sequential grid dimension over KV tiles; the online-softmax state (m, l,
+acc) lives in VMEM scratch that persists across the sequential dimension,
+and each (q-tile x kv-tile) product is one MXU matmul. GQA is handled in
+the index maps — the KV block index is `h // G`, so KV heads are never
+materialized to the full H (HBM traffic stays proportional to true KV).
+
+Grid: (B, H, nq, nk) with nk innermost (sequential revisit of the same
+output block). Causal tiles with ki*bk > (qi+1)*bq are masked out; the
+wrapper also skips them entirely when the shape allows (block-triangular
+launch is a TPU-Pallas idiom via masking, since grids must be rectangular).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, causal: bool, nk: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0]                       # (bq, D)
+    k = k_ref[0, 0]                       # (bk, D)
+    v = v_ref[0, 0]
+    D = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (D ** -0.5)
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]                   # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * scale + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * scale + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    bq: int = 128, bk: int = 128, causal: bool = True,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B,H,S,D); k,v: (B,KV,S,D) with H = KV*G -> (B,H,S,D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    kern = functools.partial(_kernel, bq=bq, bk=bk, causal=causal, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell, jit-lower + compile the
+train/prefill/decode step on the 16x16 single-pod mesh and the 2x16x16
+multi-pod mesh, print memory_analysis() + cost_analysis(), extract
+collective bytes from the compiled HLO, and append the record to a JSON
+results file consumed by the roofline analysis (benchmarks + EXPERIMENTS.md).
+
+NOTE: the XLA_FLAGS line above MUST precede any jax import — jax locks the
+device count on first init. Do not set this flag globally.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape, supports
+from repro.launch import steps as steps_lib
+from repro.launch import hlo_profile
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results.json"
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             rules=None, rules_name: str = "baseline",
+             verbose: bool = True) -> dict:
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    ok, why = supports(cfg, shape)
+    rec = {"arch": arch_name, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "rules": rules_name, "kind": shape.kind}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        step_fn, arg_specs, in_sh, out_sh, donate = steps_lib.plan(
+            cfg, shape, mesh, rules=rules)
+        with mesh:
+            jitted = jax.jit(step_fn, in_shardings=in_sh,
+                             out_shardings=out_sh,
+                             donate_argnums=tuple(donate))
+            lowered = jitted.lower(*arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if verbose:
+                print(f"  memory_analysis: {mem}")
+                print(f"  cost_analysis: flops={cost.get('flops')}, "
+                      f"bytes={cost.get('bytes accessed')} "
+                      f"(loop bodies counted once — see hlo_profile)")
+            hlo = compiled.as_text()
+            prof = hlo_profile.analyze(hlo)
+
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            # raw cost_analysis (undercounts loops; kept for reference)
+            xla_flops=float(cost.get("flops", -1)),
+            xla_bytes=float(cost.get("bytes accessed", -1)),
+            # trip-count-corrected static profile (used by SRoofline)
+            flops=prof["dot_flops"],
+            hbm_bytes=prof["hbm_bytes"],
+            collectives=prof["collectives"],
+            collective_bytes=prof["collective_operand_bytes"],
+            collective_wire_bytes=prof["collective_wire_bytes"],
+            op_census=prof["op_census"],
+            memory={
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+        )
+    except Exception as e:  # a failing cell is a bug: record and surface
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def load_results() -> list:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return []
+
+
+def save_result(rec: dict) -> None:
+    results = load_results()
+    results = [r for r in results
+               if not (r["arch"] == rec["arch"] and r["shape"] == rec["shape"]
+                       and r["mesh"] == rec["mesh"]
+                       and r.get("rules", "baseline") == rec.get("rules"))]
+    results.append(rec)
+    RESULTS.parent.mkdir(exist_ok=True)
+    RESULTS.write_text(json.dumps(results, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present with status=ok")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("rules", "baseline"))
+            for r in load_results() if r["status"] in ("ok", "skipped")}
+
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for a in archs:
+            for s in shapes:
+                if args.skip_done and (a, s, mesh_name, args.rules) in done:
+                    print(f"[skip-done] {a} x {s} @ {mesh_name}")
+                    continue
+                print(f"=== {a} x {s} @ {mesh_name} ({args.rules}) ===",
+                      flush=True)
+                rec = run_cell(a, s, multi_pod=mp, rules_name=args.rules,
+                               rules=steps_lib.resolve_rules(args.rules))
+                save_result(rec)
+                status = rec["status"]
+                extra = (f"compile={rec.get('compile_s')}s "
+                         f"flops={rec.get('flops'):.3e} "
+                         f"coll={rec.get('collective_bytes'):.3e}B"
+                         if status == "ok" else rec.get("reason",
+                                                        rec.get("error")))
+                print(f"  -> {status}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

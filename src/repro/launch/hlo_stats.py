@@ -1,0 +1,97 @@
+"""Compiled-HLO statistics: collective bytes, op census, cost analysis.
+
+collective_bytes is NOT in cost_analysis(): we parse compiled.as_text()
+(post-SPMD-partitioning HLO) and sum the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Loop bodies are multiplied by their (statically known) trip counts so
+scan-over-layers / grad-accum structures are counted correctly.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _trip_count(body_name_to_calls, computation: str) -> int:
+    return body_name_to_calls.get(computation, 1)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum operand bytes per collective kind, weighting loop bodies by trip
+    count. Returns {kind: {"bytes": b, "count": n}}."""
+    # 1) find while-loop trip counts: XLA annotates known trip counts as
+    #    e.g. `while(...), ... backend_config={"known_trip_count":{"n":"80"}}`
+    #    and bodies via body=%name. Build body -> trip multiplier.
+    trip: Dict[str, int] = {}
+    for m in re.finditer(
+            r"while\(.*?\).*?body=%?([\w.\-]+).*?known_trip_count[^0-9]*(\d+)",
+            hlo_text):
+        trip[m.group(1)] = int(m.group(2))
+    # also plain `trip_count=N` annotations
+    for m in re.finditer(r"body=%?([\w.\-]+)[^\n]*?trip_count[=\":]+(\d+)",
+                         hlo_text):
+        trip.setdefault(m.group(1), int(m.group(2)))
+
+    # 2) split into computations
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"bytes": 0.0, "count": 0})
+    current_comp = ""
+    mult = 1
+    for line in hlo_text.splitlines():
+        comp_m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->",
+                          line)
+        if comp_m:
+            current_comp = comp_m.group(1)
+            mult = trip.get(current_comp, 1)
+            continue
+        for kind in _COLLECTIVES:
+            if re.search(rf"=\s*[\w\[\],(){{}}\s]*{kind}\(", line) or \
+                    (f" {kind}(" in line and "=" in line):
+                # operand types appear inside the call parens
+                call = line.split(kind + "(", 1)[-1]
+                operand_bytes = _shape_bytes(call.split(")", 1)[0])
+                if operand_bytes == 0:
+                    # fall back to result type (left of '=')
+                    operand_bytes = _shape_bytes(line.split("=", 1)[0])
+                stats[kind]["bytes"] += operand_bytes * mult
+                stats[kind]["count"] += mult
+                break
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Counts of interesting ops (fusion/reshape/transpose/dot) for the
+    perf-iteration log."""
+    census: Dict[str, int] = defaultdict(int)
+    for op in ("fusion", "dot", "transpose", "reshape", "scatter", "gather",
+               "dynamic-update-slice", "convolution", "copy") + _COLLECTIVES:
+        census[op] = len(re.findall(rf"=\s*\S+\s+{op}\(", hlo_text))
+    return dict(census)

@@ -1,0 +1,252 @@
+"""Step builders + input specs for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for everything the lowered step
+consumes; ``shardings_for`` builds the matching in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import meshes as M
+from repro.models import decoding, transformer
+from repro.optim import adamw
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.n_vision_tokens:
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), bf16)
+        if cfg.mrope_sections:
+            specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+    if cfg.enc_dec:
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_len, cfg.d_model), bf16)
+    return specs
+
+
+def batch_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig,
+                    specs: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for name, sds in specs.items():
+        out[name] = M.data_sharding(mesh, sds.shape[0], len(sds.shape))
+    return out
+
+
+# --------------------------------------------------------------------------
+# training
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, shape: ShapeConfig,
+                    base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, grad_shardings=None,
+                    compute_shardings=None):
+    lr_fn = adamw.cosine_schedule(base_lr, warmup, total_steps)
+    accum = max(shape.grad_accum, 1)
+
+    def constrain(g):
+        # pin the fp32 grad accumulator to the param sharding — without this
+        # GSPMD replicates the scan carry (observed: +10GB/device on a 2B
+        # model). See EXPERIMENTS.md SPerf.
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def as_compute(p):
+        # SPerf-A: cast to bf16 and gather once per step onto the compute
+        # (TP) sharding. Differentiating through this constraint makes the
+        # backward re-shard gradients via reduce-scatter = ZeRO-3.
+        if compute_shardings is None:
+            return p
+        pc = jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16)
+            if a.dtype == jnp.float32 else a, p)
+        return jax.tree.map(jax.lax.with_sharding_constraint, pc,
+                            compute_shardings)
+
+    def tp_train_step(params, opt_state, batch):
+        """SPerf-A step: ONE bf16 weight gather per step (outside the
+        microbatch scan); its transpose reduce-scatters the grads."""
+        def split(x):
+            Bm = x.shape[0] // accum
+            return x.reshape((Bm, accum) + x.shape[1:]).swapaxes(0, 1)
+
+        def total_loss(p):
+            pc = as_compute(p)
+            if accum == 1:
+                return transformer.loss_fn(cfg, pc, batch)
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, one):
+                loss, m = transformer.loss_fn(cfg, pc, one)
+                return carry + loss, m["loss"]
+
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+            tot, losses = jax.lax.scan(
+                body, jnp.zeros((), jnp.float32), mb)
+            return tot / accum, {"loss": losses.mean(),
+                                 "moe_aux": jnp.zeros((), jnp.float32)}
+
+        (tot, metrics), grads = jax.value_and_grad(
+            total_loss, has_aux=True)(params)
+        grads = constrain(jax.tree.map(
+            lambda g: g.astype(jnp.float32), grads))
+        params, opt_state, om = adamw.update(grads, opt_state, params, lr_fn)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (tot, metrics), grads = jax.value_and_grad(
+                lambda p: transformer.loss_fn(cfg, as_compute(p), batch),
+                has_aux=True)(params)
+        else:
+            def micro(b):
+                return lambda p: transformer.loss_fn(cfg, as_compute(p), b)
+
+            def split(x):
+                # (B, ...) -> (accum, B/accum, ...) WITHOUT crossing shard
+                # boundaries: reshape to (B/accum, accum, ...) first (batch
+                # shards stay contiguous), then move the scan axis front.
+                Bm = x.shape[0] // accum
+                return x.reshape((Bm, accum) + x.shape[1:]).swapaxes(0, 1)
+
+            micro_batch = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                (tot, metrics), g = jax.value_and_grad(
+                    micro(mb), has_aux=True)(params)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (constrain(g_acc), loss_acc + metrics["loss"]), None
+
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro_batch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = {"loss": loss_sum / accum,
+                       "moe_aux": jnp.zeros((), jnp.float32)}
+
+        params, opt_state, om = adamw.update(grads, opt_state, params, lr_fn)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return tp_train_step if compute_shardings is not None else train_step
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return decoding.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, tokens, step):
+        return decoding.decode_step(cfg, params, cache, tokens, step)
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# full sharding plans per step kind
+# --------------------------------------------------------------------------
+
+def resolve_rules(name: str):
+    """Named sharding-rule presets (perf hillclimbs add entries here)."""
+    return M.PRESETS[name]
+
+
+def serve_param_specs(cfg: ArchConfig):
+    """Serving stores parameters in bf16."""
+    table = transformer.build_param_table(cfg)
+    shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), table.shapes())
+    return table, shapes
+
+
+def plan(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+         rules: Optional[Dict[str, Any]] = None):
+    """Returns (step_fn, arg_specs, in_shardings, out_shardings, donate).
+
+    `rules` is a preset dict {"storage": ..., "compute": ...} (see
+    distributed.meshes.PRESETS) or a bare storage-rules dict."""
+    if rules is None:
+        rules = M.PRESETS["baseline"]
+    if "storage" not in rules:
+        rules = {"storage": rules, "compute": None}
+    storage, compute = rules["storage"], rules["compute"]
+    # context-parallel attention (SPerf-A iter 3) is a module-level switch:
+    # the constraint helper no-ops when the axis is absent or indivisible.
+    transformer.CONTEXT_PARALLEL_AXIS = (
+        "model" if rules.get("context_parallel") else None)
+    transformer.CONTEXT_PARALLEL_MESH = (
+        mesh if rules.get("context_parallel") else None)
+    table = transformer.build_param_table(cfg)
+    logical = table.logical_axes()
+    specs = input_specs(cfg, shape)
+    bsh = batch_shardings(mesh, cfg, shape, specs)
+    rep = M.replicated(mesh)
+
+    if shape.kind == "train":
+        pshapes = table.shapes()
+        psh = M.param_shardings(mesh, logical, pshapes, storage)
+        csh = (M.param_shardings(mesh, logical, pshapes, compute)
+               if compute else None)
+        opt_shapes = adamw.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=pshapes, v=jax.tree.map(lambda s: s, pshapes))
+        osh = adamw.AdamWState(step=rep, m=psh, v=jax.tree.map(lambda s: s, psh))
+        step_fn = make_train_step(cfg, shape, grad_shardings=psh,
+                                  compute_shardings=csh)
+        metrics_sh = {"loss": rep, "moe_aux": rep, "grad_norm": rep, "lr": rep}
+        return (step_fn, (pshapes, opt_shapes, specs), (psh, osh, bsh),
+                (psh, osh, metrics_sh), (0, 1))
+
+    table, pshapes = serve_param_specs(cfg)
+    # serving has no optimizer state: store params directly in the compute
+    # (TP) sharding when the preset provides one — kills per-step gathers.
+    psh = M.param_shardings(mesh, logical, pshapes, compute or storage)
+    if shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg)
+        cspec = decoding.cache_spec(cfg, shape)
+        csh = M.cache_shardings(mesh, cspec)
+        logits_sh = M.data_sharding(mesh, shape.global_batch, 2)
+        return (step_fn, (pshapes, specs), (psh, bsh),
+                (logits_sh, csh), ())
+
+    # decode
+    cspec = decoding.cache_spec(cfg, shape,
+                                kv_int8=bool(rules.get("kv_int8")))
+    csh = M.cache_shardings(mesh, cspec)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = M.data_sharding(mesh, shape.global_batch, 2)
+    step_scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    step_fn = make_decode_step(cfg)
+    logits_sh = M.data_sharding(mesh, shape.global_batch, 3)
+    return (step_fn, (pshapes, cspec, tok, step_scalar),
+            (psh, csh, tok_sh, rep), (logits_sh, csh), (1,))

@@ -1,0 +1,176 @@
+"""Grouped-query attention: full, kv-chunked (flash-style online softmax in
+pure JAX) and single-token decode against a (possibly ring-buffered) cache.
+
+Shapes: q (B,Sq,H,D); k,v (B,Sk,KV,D) with H = KV*G. KV heads are never
+materialized to H — all einsums keep the (KV, G) grouping so GQA stays
+memory-proportional to the true KV size.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int, is_global) -> jax.Array:
+    """(…,Sq,Sk) boolean mask. `is_global` (traced bool) disables the window."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    allowed = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        allowed &= kp <= qp
+    if window:
+        in_win = (qp - kp) < window
+        if is_global is None:
+            allowed &= in_win
+        else:
+            allowed &= jnp.logical_or(is_global, in_win)
+    return allowed
+
+
+def full_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                   is_global=None, k_positions=None):
+    """Plain attention; scores materialized. Use for seq <= ~8k."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q5 = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q5, k,
+                        preferred_element_type=jnp.float32)
+    scores *= D ** -0.5
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1]) if k_positions is None else k_positions
+    allowed = _mask(q_pos, k_pos, causal=causal, window=window,
+                    is_global=is_global)
+    scores = jnp.where(allowed, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      k_offset=0, chunk=2048, is_global=None):
+    """Flash-style attention: scan over KV chunks with online softmax.
+
+    Peak memory is O(Sq*chunk) instead of O(Sq*Sk); this is what keeps the
+    32k-prefill dry-run memory honest without a hand-written kernel.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if Sk % chunk != 0:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, k_positions=k_offset
+                              + jnp.arange(Sk), is_global=is_global)
+    n_chunks = Sk // chunk
+    q5 = (q.reshape(B, Sq, KV, G, D) * D ** -0.5).astype(q.dtype)
+    kc = k.reshape(B, n_chunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        k_pos = k_offset + ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q5, kb,
+                       preferred_element_type=jnp.float32)
+        allowed = _mask(q_pos, k_pos, causal=causal, window=window,
+                        is_global=is_global)
+        s = jnp.where(allowed, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        scale = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(q.dtype), vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, chunk=2048,
+                      is_global=None):
+    """Flash-style blocking on BOTH axes: python-unrolled loop over Q blocks,
+    online-softmax scan over KV chunks inside. Causal/SWA Q blocks statically
+    skip KV chunks outside their receptive field (halves causal FLOPs) —
+    unless `is_global` is traced (hymba scanned layers), where the window
+    skip must stay conservative."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    qc = min(Sq, 2 * chunk)
+    if Sq % qc != 0:
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 chunk=chunk, is_global=is_global)
+    outs = []
+    static_window = window if (window and is_global is None) else 0
+    for qi in range(Sq // qc):
+        q_off = qi * qc
+        qb = jax.lax.slice_in_dim(q, q_off, q_off + qc, axis=1)
+        lo, hi = 0, Sk
+        if causal:
+            hi = min(Sk, q_off + qc)
+        if static_window:
+            lo = max(0, q_off - static_window + 1)
+        lo = (lo // chunk) * chunk           # align to chunk grid
+        hi = -(-hi // chunk) * chunk if hi % chunk else hi
+        hi = min(hi, Sk)
+        kb = jax.lax.slice_in_dim(k, lo, hi, axis=1)
+        vb = jax.lax.slice_in_dim(v, lo, hi, axis=1)
+        outs.append(chunked_attention(
+            qb, kb, vb, causal=causal, window=window, chunk=chunk,
+            is_global=is_global, q_offset=q_off, k_offset=lo))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, chunk=2048,
+              is_global=None):
+    if k.shape[1] > chunk:
+        return blocked_attention(q, k, v, causal=causal, window=window,
+                                 chunk=chunk, is_global=is_global)
+    return full_attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, is_global=is_global)
+
+
+def decode_attention(q, cache_k, cache_v, cache_pos, *, window=0,
+                     is_global=None):
+    """One-token decode. cache_k/v: (B,W,KV,D); cache_pos: (B,W) int32 of the
+    absolute position stored in each slot (-1 = empty). Ring-buffer-safe."""
+    B, _one, H, D = q.shape
+    KV = cache_k.shape[2]
+    G = H // KV
+    q4 = q.reshape(B, KV, G, D) * D ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", q4, cache_k,
+                   preferred_element_type=jnp.float32)
+    valid = cache_pos >= 0
+    if window and is_global is None:
+        cur = cache_pos.max(axis=-1, keepdims=True)
+        valid &= (cur - cache_pos) < window
+    elif window:
+        cur = cache_pos.max(axis=-1, keepdims=True)
+        valid &= jnp.logical_or(is_global, (cur - cache_pos) < window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, cache_v)
+    return out.reshape(B, 1, H, D)
+
+
+def cache_update(cache_k, cache_v, cache_pos, k_new, v_new, step):
+    """Write one token into a ring buffer. step: scalar int32 (absolute pos)."""
+    W = cache_k.shape[1]
+    slot = step % W
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    B = cache_pos.shape[0]
+    cache_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_pos, jnp.full((B, 1), step, cache_pos.dtype), slot, axis=1)
+    return cache_k, cache_v, cache_pos

@@ -1,0 +1,356 @@
+"""KV-cache / recurrent-state management and single-token decode steps.
+
+Cache layouts (W = ring-buffer width = min(seq_len, swa_window or inf)):
+ - dense/vlm/moe : {"k": (L,B,W,KV,D), "v": ..., "pos": (B,W) int32}
+ - whisper       : + {"xk": (L,B,Se,KV,D), "xv": ...} cross-attn memory
+ - rwkv6         : {"state": (L,B,H,Dk,Dv) f32, "x_tm"/"x_cm": (L,B,d)}
+ - hymba(hybrid) : per-layer list (SWA layers use W=window, global layers
+                   W=seq_len) + stacked ssm state; layers are unrolled in
+                   the decode step because cache shapes are heterogeneous.
+Decode steps are pure: (params, cache, tokens, step) -> (logits, cache').
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import rms_norm, rope_angles, apply_rope, sinusoidal_at
+from repro.models.transformer import (_mlp, _project_qkv, block_fwd, encode,
+                                      embed_inputs)
+
+
+def _cache_width(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.swa_window and not cfg.global_attn_every:
+        return min(cfg.swa_window, seq_len)
+    return seq_len
+
+
+def cache_spec(cfg: ArchConfig, shape: ShapeConfig,
+               kv_int8: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStructs of the decode cache (bf16 KV, fp32 recurrent).
+
+    kv_int8 (SPerf-B): stacked KV stored as int8 with per-(slot, head)
+    scales — halves the dominant HBM stream of long-context decode."""
+    B, S = shape.global_batch, shape.seq_len
+    L, KV, D = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    d = cfg.d_model
+    bf16 = jnp.bfloat16
+    if cfg.attn_free:
+        H = cfg.n_heads
+        return {
+            "state": jax.ShapeDtypeStruct((L, B, H, D, D), jnp.float32),
+            "x_tm": jax.ShapeDtypeStruct((L, B, d), bf16),
+            "x_cm": jax.ShapeDtypeStruct((L, B, d), bf16),
+        }
+    if cfg.family == "hybrid":
+        W = min(cfg.swa_window, S)
+        layers = []
+        for i in range(L):
+            wi = S if (cfg.global_attn_every
+                       and i % cfg.global_attn_every == 0) else W
+            layers.append({
+                "k": jax.ShapeDtypeStruct((B, wi, KV, D), bf16),
+                "v": jax.ShapeDtypeStruct((B, wi, KV, D), bf16),
+                "pos": jax.ShapeDtypeStruct((B, wi), jnp.int32),
+            })
+        H = cfg.n_heads
+        return {"layers": layers,
+                "ssm": jax.ShapeDtypeStruct(
+                    (L, B, H, D, cfg.ssm_state), jnp.float32)}
+    W = _cache_width(cfg, S)
+    kv_dt = jnp.int8 if kv_int8 else bf16
+    spec = {
+        "k": jax.ShapeDtypeStruct((L, B, W, KV, D), kv_dt),
+        "v": jax.ShapeDtypeStruct((L, B, W, KV, D), kv_dt),
+        "pos": jax.ShapeDtypeStruct((B, W), jnp.int32),
+    }
+    if kv_int8:
+        spec["k_scale"] = jax.ShapeDtypeStruct((L, B, W, KV, 1), bf16)
+        spec["v_scale"] = jax.ShapeDtypeStruct((L, B, W, KV, 1), bf16)
+    if cfg.enc_dec:
+        Se = cfg.enc_len
+        spec["xk"] = jax.ShapeDtypeStruct((L, B, Se, KV, D), bf16)
+        spec["xv"] = jax.ShapeDtypeStruct((L, B, Se, KV, D), bf16)
+    return spec
+
+
+def init_cache(cfg: ArchConfig, shape: ShapeConfig,
+               kv_int8: bool = False) -> Dict[str, Any]:
+    def zero(sds):
+        if sds.dtype == jnp.int32:
+            return jnp.full(sds.shape, -1, sds.dtype)
+        return jnp.zeros(sds.shape, sds.dtype)
+    return jax.tree.map(zero, cache_spec(cfg, shape, kv_int8))
+
+
+def _quantize_kv(x: jax.Array):
+    """x: (...,KV,D) -> (int8 (...,KV,D), scale (...,KV,1) bf16)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)).astype(jnp.bfloat16)
+
+
+# --------------------------------------------------------------------------
+# decode steps
+# --------------------------------------------------------------------------
+
+def _attn_decode(cfg, p, nx, ck, cv, cpos, step, is_global=None,
+                 scales=None):
+    """nx: (B,1,d). Returns (attn_out, ck', cv', cpos'[, ks', vs']).
+
+    scales=(ks, vs) switches to the int8 cache path: the NEW token's k/v
+    are quantized directly and written; attention reads the dequantized
+    cache (transient, per layer)."""
+    q, k, v = _project_qkv(cfg, p, nx)
+    if cfg.rope_theta:
+        B = nx.shape[0]
+        pos = jnp.broadcast_to(step, (B, 1)).astype(jnp.int32)
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+        ang = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta,
+                          cfg.mrope_sections)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+    window = cfg.swa_window if cfg.swa_window else 0
+    if scales is not None:
+        ks, vs = scales
+        kq, ksc = _quantize_kv(k)
+        vq, vsc = _quantize_kv(v)
+        W = ck.shape[1]
+        slot = step % W
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, kq, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vq, slot, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(ks, ksc, slot, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(vs, vsc, slot, axis=1)
+        B = cpos.shape[0]
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cpos, jnp.full((B, 1), step, cpos.dtype), slot, axis=1)
+        o = attn_lib.decode_attention(q, _dequantize_kv(ck, ks),
+                                      _dequantize_kv(cv, vs), cpos,
+                                      window=window, is_global=is_global)
+        return (o.reshape(nx.shape[0], 1, -1) @ p["wo"], ck, cv, cpos,
+                ks, vs)
+    ck, cv, cpos = attn_lib.cache_update(ck, cv, cpos, k.astype(ck.dtype),
+                                         v.astype(cv.dtype), step)
+    o = attn_lib.decode_attention(q, ck, cv, cpos, window=window,
+                                  is_global=is_global)
+    return o.reshape(nx.shape[0], 1, -1) @ p["wo"], ck, cv, cpos
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens: jax.Array,
+                step: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B,1) int32; step: scalar int32 absolute position."""
+    from repro.models.transformer import cast_params
+    params = cast_params(cfg, params)
+    if cfg.attn_free:
+        return _decode_rwkv(cfg, params, cache, tokens, step)
+    if cfg.family == "hybrid":
+        return _decode_hybrid(cfg, params, cache, tokens, step)
+    return _decode_stacked(cfg, params, cache, tokens, step)
+
+
+def _embed_decode(cfg, params, tokens, step):
+    x = params["embed"]["tokens"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if not cfg.rope_theta and not cfg.mrope_sections:
+        pos = jnp.broadcast_to(step, tokens.shape).astype(jnp.int32)
+        x = x + sinusoidal_at(pos, cfg.d_model, x.dtype)
+    return x
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["tokens"].T if cfg.tie_embeddings
+            else params["head"]["w"])
+    return x @ head.astype(x.dtype)
+
+
+def _decode_stacked(cfg, params, cache, tokens, step):
+    """dense / vlm / moe / whisper-decoder: scan over stacked layers."""
+    x = _embed_decode(cfg, params, tokens, step)
+    int8 = cache["k"].dtype == jnp.int8
+
+    def body(xc, inp):
+        if cfg.enc_dec:
+            lp, ck, cv, xk, xv = inp[:5]
+        else:
+            lp, ck, cv = inp[:3]
+            xk = xv = None
+        ks = vs = None
+        if int8:
+            ks, vs = inp[-2], inp[-1]
+        cpos = cache["pos"]
+        nx = rms_norm(xc, lp["norm1"], cfg.norm_eps)
+        if int8:
+            a, ck, cv, cpos, ks, vs = _attn_decode(
+                cfg, lp["attn"], nx, ck, cv, cpos, step, scales=(ks, vs))
+        else:
+            a, ck, cv, cpos = _attn_decode(cfg, lp["attn"], nx, ck, cv,
+                                           cpos, step)
+        xc = xc + a
+        if cfg.enc_dec:
+            nx = rms_norm(xc, lp["norm3"], cfg.norm_eps)
+            B = nx.shape[0]
+            hd = cfg.resolved_head_dim
+            q = (nx @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+            xpos = jnp.broadcast_to(jnp.arange(xk.shape[1]), (B, xk.shape[1]))
+            o = attn_lib.decode_attention(q, xk, xv, xpos.astype(jnp.int32))
+            xc = xc + o.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+        nx = rms_norm(xc, lp["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            m, _aux = moe_lib.moe_ffn(cfg, lp["moe"], nx)
+            xc = xc + m
+        else:
+            xc = xc + _mlp(cfg, lp["mlp"], nx)
+        if int8:
+            return xc, (ck, cv, cpos, ks, vs)
+        return xc, (ck, cv, cpos)
+
+    ins = [params["blocks"], cache["k"], cache["v"]]
+    if cfg.enc_dec:
+        ins += [cache["xk"], cache["xv"]]
+    if int8:
+        ins += [cache["k_scale"], cache["v_scale"]]
+    x, outs = jax.lax.scan(body, x, tuple(ins))
+    # every layer writes the same slot: take layer 0's pos update
+    if int8:
+        ck, cv, cpos, ks, vs = outs
+        new_cache = dict(cache, k=ck, v=cv, pos=cpos[0], k_scale=ks,
+                         v_scale=vs)
+    else:
+        ck, cv, cpos = outs
+        new_cache = dict(cache, k=ck, v=cv, pos=cpos[0])
+    return _logits(cfg, params, x), new_cache
+
+
+def _decode_rwkv(cfg, params, cache, tokens, step):
+    x = _embed_decode(cfg, params, tokens, step)
+
+    def body(xc, inp):
+        lp, st, x_tm, x_cm = inp
+        nx = rms_norm(xc, lp["norm1"], cfg.norm_eps)
+        o, st, x_tm_new = rwkv_lib.time_mix(cfg, lp["rwkv"], nx, st,
+                                            x_tm.astype(nx.dtype))
+        xc = xc + o
+        nx = rms_norm(xc, lp["norm2"], cfg.norm_eps)
+        o, x_cm_new = rwkv_lib.channel_mix(cfg, lp["rwkv"], nx,
+                                           x_cm.astype(nx.dtype))
+        return xc + o, (st, x_tm_new.astype(x_tm.dtype),
+                        x_cm_new.astype(x_cm.dtype))
+
+    x, (st, x_tm, x_cm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["state"], cache["x_tm"],
+                  cache["x_cm"]))
+    return _logits(cfg, params, x), {"state": st, "x_tm": x_tm, "x_cm": x_cm}
+
+
+def _decode_hybrid(cfg, params, cache, tokens, step):
+    """hymba: unrolled layers (heterogeneous cache widths)."""
+    x = _embed_decode(cfg, params, tokens, step)
+    new_layers = []
+    ssm_states = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["blocks"])
+        lc = cache["layers"][i]
+        is_global = bool(cfg.global_attn_every
+                         and i % cfg.global_attn_every == 0)
+        nx = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        a, ck, cv, cpos = _attn_decode(
+            cfg, lp["attn"], nx, lc["k"], lc["v"], lc["pos"], step,
+            is_global=jnp.asarray(is_global))
+        s, st = ssm_lib.ssm_decode_step(cfg, lp["ssm"], nx, cache["ssm"][i])
+        fs = lp["fuse_scale"]
+        x = x + 0.5 * (fs[0] * a + fs[1] * s)
+        nx = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + _mlp(cfg, lp["mlp"], nx)
+        new_layers.append({"k": ck, "v": cv, "pos": cpos})
+        ssm_states.append(st)
+    new_cache = {"layers": new_layers, "ssm": jnp.stack(ssm_states)}
+    return _logits(cfg, params, x), new_cache
+
+
+# --------------------------------------------------------------------------
+# prefill: forward pass that also returns a populated cache
+# --------------------------------------------------------------------------
+
+def _pad_cache_entry(k, v, pos, width: int):
+    """Extend a (B,S,KV,D) cache to `width` slots (empty slots pos=-1)."""
+    S = k.shape[1]
+    if width <= S:
+        return k[:, S - width:], v[:, S - width:], pos[:, S - width:]
+    padk = ((0, 0), (0, width - S), (0, 0), (0, 0))
+    k = jnp.pad(k, padk)
+    v = jnp.pad(v, padk)
+    pos = jnp.pad(pos, ((0, 0), (0, width - S)), constant_values=-1)
+    return k, v, pos
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: int = 0
+            ) -> Tuple[jax.Array, Dict]:
+    """Runs the full forward and materializes the decode cache.
+
+    `max_len` sets the decode horizon: full-attention caches are padded to
+    that many slots (ring-buffer alignment: prompt token i sits in slot i).
+    Returns (last-position logits (B,V), cache)."""
+    from repro.models.transformer import forward
+    logits, _aux, (kvs, enc_out) = forward(cfg, params, batch, kind="prefill")
+    B, S = batch["tokens"].shape
+    max_len = max(max_len, S)
+
+    if cfg.attn_free:
+        st, x_tm, x_cm = kvs
+        cache = {"state": st, "x_tm": x_tm.astype(jnp.bfloat16),
+                 "x_cm": x_cm.astype(jnp.bfloat16)}
+        return logits[:, -1], cache
+
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.family == "hybrid":
+        (k_all, v_all), ssm_state = kvs                   # hetero windows
+        layers = []
+        for i in range(cfg.n_layers):
+            full = bool(cfg.global_attn_every
+                        and i % cfg.global_attn_every == 0)
+            wi = max_len if full else min(cfg.swa_window, max_len)
+            k, v, p = _pad_cache_entry(
+                k_all[i].astype(jnp.bfloat16),
+                v_all[i].astype(jnp.bfloat16), pos, wi)
+            layers.append({"k": k, "v": v, "pos": p})
+        return logits[:, -1], {"layers": layers, "ssm": ssm_state}
+    k_all, v_all = kvs                                    # (L,B,S,KV,D)
+    W = _cache_width(cfg, max_len)
+    if W <= S:
+        k = k_all[:, :, S - W:]
+        v = v_all[:, :, S - W:]
+        p = pos[:, S - W:]
+    else:
+        padk = ((0, 0), (0, 0), (0, W - S), (0, 0), (0, 0))
+        k = jnp.pad(k_all, padk)
+        v = jnp.pad(v_all, padk)
+        p = jnp.pad(pos, ((0, 0), (0, W - S)), constant_values=-1)
+    cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+             "pos": p}
+    if cfg.enc_dec:
+        hd = cfg.resolved_head_dim
+        KV = cfg.n_kv_heads
+        Se = enc_out.shape[1]
+
+        def xkv(lp):
+            xk = (enc_out @ lp["xattn"]["wk"]).reshape(B, Se, KV, hd)
+            xv = (enc_out @ lp["xattn"]["wv"]).reshape(B, Se, KV, hd)
+            return xk.astype(jnp.bfloat16), xv.astype(jnp.bfloat16)
+
+        xk, xv = jax.lax.map(xkv, params["blocks"])
+        cache["xk"], cache["xv"] = xk, xv
+    return logits[:, -1], cache

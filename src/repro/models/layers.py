@@ -1,0 +1,157 @@
+"""Parameter-table machinery + elementary layers (no flax dependency).
+
+Parameters live in nested dicts of jnp arrays. Every parameter is declared
+through a :class:`ParamTable` with *logical axis names*; the distributed
+layer maps logical axes -> mesh axes (with divisibility fallback), so the
+same model definition serves 1-device smoke tests and 512-device dry-runs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary (see distributed/meshes.py for the mapping):
+#   "layers"  : stacked layer dim (never sharded)
+#   "embed"   : d_model dims             -> fsdp ("data") axis
+#   "vocab"   : vocabulary dim           -> "model" axis
+#   "heads"   : flattened n_heads*hd dim -> "model" axis
+#   "kv"      : flattened n_kv*hd dim    -> "model" axis
+#   "ff"      : feed-forward hidden dim  -> "model" axis
+#   "experts" : MoE expert dim           -> "model" axis (if divisible)
+#   None      : replicated
+
+Initializer = str  # "normal" | "zeros" | "ones" | "embed"
+
+PROD_MODEL_AXIS = 16   # "model" axis size on the production meshes
+
+
+def head_axis(n_heads: int) -> str:
+    """Logical axis for flat (n_heads*head_dim) dims: shardable on the
+    model axis only when the head COUNT divides it (else reshape-reshard)."""
+    return "heads" if n_heads % PROD_MODEL_AXIS == 0 else "heads_flat"
+
+
+class ParamTable:
+    """Declarative parameter registry: path -> (shape, dtype, axes, init)."""
+
+    def __init__(self, dtype=jnp.float32):
+        self.defs: Dict[str, Tuple[Tuple[int, ...], Any, Tuple, Initializer, float]] = {}
+        self.dtype = dtype
+
+    def add(self, path: str, shape: Sequence[int], axes: Sequence[Optional[str]],
+            init: Initializer = "normal", scale: Optional[float] = None,
+            dtype=None):
+        assert len(shape) == len(axes), (path, shape, axes)
+        if scale is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        self.defs[path] = (tuple(int(s) for s in shape), dtype or self.dtype,
+                           tuple(axes), init, scale)
+
+    # -- materialization ---------------------------------------------------
+    def init(self, rng: jax.Array) -> Dict[str, Any]:
+        params: Dict[str, Any] = {}
+        keys = jax.random.split(rng, max(len(self.defs), 1))
+        for (path, (shape, dtype, _axes, kind, scale)), k in zip(
+                sorted(self.defs.items()), keys):
+            if kind == "zeros":
+                arr = jnp.zeros(shape, dtype)
+            elif kind == "ones":
+                arr = jnp.ones(shape, dtype)
+            else:
+                arr = (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+            _assign(params, path, arr)
+        return params
+
+    def shapes(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for path, (shape, dtype, _axes, _k, _s) in sorted(self.defs.items()):
+            _assign(out, path, jax.ShapeDtypeStruct(shape, dtype))
+        return out
+
+    def logical_axes(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for path, (_shape, _dtype, axes, _k, _s) in sorted(self.defs.items()):
+            _assign(out, path, axes)
+        return out
+
+
+def _assign(tree: Dict[str, Any], path: str, value: Any) -> None:
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = value
+
+
+# --------------------------------------------------------------------------
+# elementary ops
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def sinusoidal_at(positions: jax.Array, dim: int, dtype=jnp.float32) -> jax.Array:
+    """Sinusoidal encoding for arbitrary (possibly traced) positions.
+
+    positions: (...,) int -> (..., dim). Used by whisper-style models
+    (rope_theta == 0) so decode steps never need a position table."""
+    pos = positions.astype(jnp.float32)[..., None]
+    half = dim // 2
+    div = jnp.exp(jnp.arange(half, dtype=jnp.float32)
+                  * (-math.log(10000.0) / half))
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    pos = np.arange(length)[:, None]
+    div = np.exp(np.arange(0, dim, 2) * (-math.log(10000.0) / dim))
+    pe = np.zeros((length, dim), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe, dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (standard + multimodal M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                sections: Tuple[int, ...] = ()) -> jax.Array:
+    """positions: (B,S) int or (B,S,3) for M-RoPE. Returns (B,S,head_dim//2)."""
+    half = head_dim // 2
+    inv_freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if sections:
+        assert sum(sections) == half, (sections, half)
+        pos = positions.astype(jnp.float32)  # (B,S,3)
+        chunks, start = [], 0
+        for i, sec in enumerate(sections):
+            chunks.append(pos[..., i % pos.shape[-1], None]
+                          * inv_freq[start:start + sec])
+            start += sec
+        return jnp.concatenate(chunks, axis=-1)
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B,S,H,D); angles: (B,S,D//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(dt)

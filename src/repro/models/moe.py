@@ -1,0 +1,69 @@
+"""Top-k mixture-of-experts with scatter-based (GShard-capacity) dispatch.
+
+Dispatch is gather/scatter, NOT one-hot matmul, so HLO FLOPs stay close to
+the active-parameter ideal (6*N_active*D). Tokens are scattered into an
+(E, C, d) buffer; when the expert dim is sharded over the "model" mesh axis
+(expert parallelism) XLA lowers the scatter/gather pair to an all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamTable, activation
+
+
+def declare_moe(t: ParamTable, prefix: str, cfg: ArchConfig, n_layers: int):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    L = n_layers
+    t.add(f"{prefix}/router", (L, d, E), ("layers", "embed", None))
+    t.add(f"{prefix}/w_gate", (L, E, d, f), ("layers", "experts", "embed", "ff"))
+    t.add(f"{prefix}/w_up", (L, E, d, f), ("layers", "experts", "embed", "ff"))
+    t.add(f"{prefix}/w_down", (L, E, f, d), ("layers", "experts", "ff", "embed"))
+
+
+def moe_ffn(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+            deterministic_capacity: int = 0) -> jax.Array:
+    """x: (B,S,d) -> (B,S,d). p holds per-layer slices (no leading L dim)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = deterministic_capacity or max(
+        int(cfg.capacity_factor * k * T / E), 1)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)             # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each assignment within its expert (capacity bookkeeping)
+    flat_e = idx.reshape(-1)                              # (T*k,)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (T*k,E)
+    pos = (jnp.cumsum(oh, axis=0) - 1) * oh
+    pos = pos.sum(-1)                                     # (T*k,)
+    keep = (pos < C).astype(x.dtype)
+    dest = flat_e * C + jnp.minimum(pos, C - 1)           # (T*k,)
+
+    xt_rep = jnp.repeat(xt, k, axis=0)                    # (T*k,d)
+    buf = jnp.zeros((E * C, d), x.dtype).at[dest].add(
+        xt_rep * keep[:, None])
+    xe = buf.reshape(E, C, d)
+
+    act = activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, d)
+
+    y = ye[dest] * (keep * gate_vals.reshape(-1).astype(x.dtype))[:, None]
+    y = y.reshape(T, k, d).sum(axis=1)
+
+    # auxiliary load-balancing loss (Switch-style), returned via side channel
+    me = probs.mean(axis=0)                               # (E,)
+    ce = oh.reshape(T, k, E).sum(axis=(0, 1)).astype(jnp.float32) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,86 @@
+"""Selective SSM (mamba-style) head bank used by the Hymba hybrid blocks.
+
+State: (B, H, Dh, N). Recurrence per step t (decay a_t in (0,1), data-dep):
+    S_t = a_t * S_{t-1} + dt_t * x_t (outer) B_t
+    y_t = S_t @ C_t + D_h * x_t
+Training/prefill use a lax.scan over time (HLO-compact); decode is a single
+recurrence step. Kernel-accelerated diagonal scan lives in repro.kernels.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ParamTable, head_axis
+
+
+def declare_ssm(t: ParamTable, prefix: str, cfg: ArchConfig, n_layers: int):
+    d, H = cfg.d_model, cfg.n_heads
+    Dh = cfg.resolved_head_dim
+    N, L = cfg.ssm_state, n_layers
+    ha = head_axis(H)
+    t.add(f"{prefix}/in_proj", (L, d, H * Dh), ("layers", "embed", ha))
+    t.add(f"{prefix}/gate_proj", (L, d, H * Dh), ("layers", "embed", ha))
+    t.add(f"{prefix}/bc_proj", (L, d, 2 * N), ("layers", "embed", None))
+    t.add(f"{prefix}/dt_proj", (L, d, H), ("layers", "embed", None))
+    t.add(f"{prefix}/a_log", (L, H), ("layers", None), init="zeros")
+    t.add(f"{prefix}/d_skip", (L, H), ("layers", None), init="ones")
+    t.add(f"{prefix}/out_proj", (L, H * Dh, d), ("layers", ha, "embed"))
+
+
+def _ssm_inputs(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array):
+    B, S, d = x.shape
+    H, Dh, N = cfg.n_heads, cfg.resolved_head_dim, cfg.ssm_state
+    xh = (x @ p["in_proj"]).reshape(B, S, H, Dh)
+    z = (x @ p["gate_proj"]).reshape(B, S, H, Dh)
+    bc = x @ p["bc_proj"]
+    Bmat, Cmat = bc[..., :N], bc[..., N:]                 # (B,S,N)
+    dt = jax.nn.softplus(x @ p["dt_proj"])                # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32))
+                [None, None] * dt.astype(jnp.float32))    # (B,S,H)
+    return xh, z, Bmat, Cmat, dt, a
+
+
+def ssm_scan(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+             state: jax.Array | None = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (y: (B,S,d), final_state: (B,H,Dh,N))."""
+    B, S, d = x.shape
+    H, Dh, N = cfg.n_heads, cfg.resolved_head_dim, cfg.ssm_state
+    xh, z, Bmat, Cmat, dt, a = _ssm_inputs(cfg, p, x)
+    if state is None:
+        state = jnp.zeros((B, H, Dh, N), jnp.float32)
+
+    def step(S_prev, inp):
+        xh_t, B_t, C_t, dt_t, a_t = inp
+        contrib = (dt_t[:, :, None] * xh_t)[..., None] * B_t[:, None, None, :]
+        S_new = a_t[:, :, None, None] * S_prev + contrib.astype(jnp.float32)
+        y_t = jnp.einsum("bhdn,bn->bhd", S_new, C_t.astype(jnp.float32))
+        return S_new, y_t
+
+    seq = (xh.transpose(1, 0, 2, 3), Bmat.transpose(1, 0, 2),
+           Cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+           a.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, seq)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)          # (B,S,H,Dh)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y * jax.nn.silu(z)
+    return y.reshape(B, S, H * Dh) @ p["out_proj"], state
+
+
+def ssm_decode_step(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array,
+                    state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,1,d); state: (B,H,Dh,N) -> (y: (B,1,d), state')."""
+    B, _one, d = x.shape
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    xh, z, Bmat, Cmat, dt, a = _ssm_inputs(cfg, p, x)
+    contrib = (dt[:, 0, :, None] * xh[:, 0])[..., None] * \
+        Bmat[:, 0, None, None, :]
+    state = a[:, 0, :, None, None] * state + contrib.astype(jnp.float32)
+    y = jnp.einsum("bhdn,bn->bhd", state, Cmat[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + p["d_skip"][None, :, None] * xh[:, 0]
+    y = (y * jax.nn.silu(z[:, 0])).reshape(B, 1, H * Dh)
+    return y @ p["out_proj"], state

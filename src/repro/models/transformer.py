@@ -1,0 +1,369 @@
+"""Unified decoder stack for all assigned LM families.
+
+Design notes (see DESIGN.md):
+ - Layers are *stacked* on a leading L axis and driven by ``lax.scan`` so the
+   HLO stays compact (critical: dry-runs compile 512-way SPMD on one host).
+ - One block function serves dense / vlm / moe / hybrid; rwkv6 has its own
+   block; whisper adds an encoder stack + cross-attention.
+ - Everything is a pure function of (cfg, params, inputs); parameters are
+   declared via ParamTable with logical sharding axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (ParamTable, activation, apply_rope, head_axis,
+                                 rms_norm, rope_angles, sinusoidal_at,
+                                 sinusoidal_positions)
+
+MOE_AUX_WEIGHT = 0.01
+
+# SPerf iteration 3 (context-parallel attention): when set to a mesh axis
+# name, attention activations are constrained to be sequence-sharded over
+# that axis, so QKV/WO stay flat-sharded (no redundant projection FLOPs)
+# while attention itself runs seq-parallel with a cheap GQA KV allgather
+# instead of per-layer activation psums. Enabled via the "cp" rules preset
+# (launch/steps.py); None = off.
+CONTEXT_PARALLEL_AXIS = None
+CONTEXT_PARALLEL_MESH = None   # set by launch.steps.plan (with-mesh context
+                               # is not introspectable during tracing)
+
+
+def _cp_constrain(x, spec_dims):
+    """with_sharding_constraint helper honoring CONTEXT_PARALLEL_AXIS."""
+    import jax.sharding as jsh
+    if CONTEXT_PARALLEL_AXIS is None or CONTEXT_PARALLEL_MESH is None:
+        return x
+    mesh = CONTEXT_PARALLEL_MESH
+    shape = dict(mesh.shape)
+    if CONTEXT_PARALLEL_AXIS not in shape:
+        return x
+    if "model" in [d for d in spec_dims] and \
+            x.shape[1] % shape[CONTEXT_PARALLEL_AXIS]:
+        return x
+    batch = tuple(a for a in ("pod", "data") if a in shape) or None
+    spec = [batch] + list(spec_dims)
+    return jax.lax.with_sharding_constraint(
+        x, jsh.NamedSharding(mesh, jsh.PartitionSpec(*spec)))
+
+
+# --------------------------------------------------------------------------
+# parameter declaration
+# --------------------------------------------------------------------------
+
+def _declare_attn(t: ParamTable, prefix: str, cfg: ArchConfig, L: int,
+                  cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    # Head counts that do not divide the production model axis get the
+    # "_flat" logical axis: sharding the flat H*hd dim would force a
+    # reshape-reshard in attention (observed: 249MB all-reduces x 9307 on
+    # qwen2.5-32b), so the TP preset replicates those weights instead.
+    ha = head_axis(H)
+    ka = "kv" if KV % 16 == 0 else "kv_flat"
+    t.add(f"{prefix}/wq", (L, d, H * hd), ("layers", "embed", ha))
+    t.add(f"{prefix}/wk", (L, d, KV * hd), ("layers", "embed", ka))
+    t.add(f"{prefix}/wv", (L, d, KV * hd), ("layers", "embed", ka))
+    t.add(f"{prefix}/wo", (L, H * hd, d), ("layers", ha, "embed"))
+    if cfg.qkv_bias and not cross:
+        t.add(f"{prefix}/bq", (L, H * hd), ("layers", ha), init="zeros")
+        t.add(f"{prefix}/bk", (L, KV * hd), ("layers", ka), init="zeros")
+        t.add(f"{prefix}/bv", (L, KV * hd), ("layers", ka), init="zeros")
+
+
+def _declare_mlp(t: ParamTable, prefix: str, cfg: ArchConfig, L: int):
+    d, f = cfg.d_model, cfg.d_ff
+    t.add(f"{prefix}/w_gate", (L, d, f), ("layers", "embed", "ff"))
+    t.add(f"{prefix}/w_up", (L, d, f), ("layers", "embed", "ff"))
+    t.add(f"{prefix}/w_down", (L, f, d), ("layers", "ff", "embed"))
+
+
+def build_param_table(cfg: ArchConfig) -> ParamTable:
+    t = ParamTable()
+    d, L = cfg.d_model, cfg.n_layers
+    t.add("embed/tokens", (cfg.vocab_size, d), ("vocab", "embed"),
+          init="embed", scale=0.02)
+    if not cfg.tie_embeddings:
+        t.add("head/w", (d, cfg.vocab_size), ("embed", "vocab"))
+    t.add("final_norm", (d,), (None,), init="ones")
+
+    if cfg.attn_free:                                     # rwkv6
+        t.add("blocks/norm1", (L, d), ("layers", None), init="ones")
+        t.add("blocks/norm2", (L, d), ("layers", None), init="ones")
+        rwkv_lib.declare_rwkv(t, "blocks/rwkv", cfg, L)
+        return t
+
+    t.add("blocks/norm1", (L, d), ("layers", None), init="ones")
+    t.add("blocks/norm2", (L, d), ("layers", None), init="ones")
+    _declare_attn(t, "blocks/attn", cfg, L)
+    if cfg.family == "hybrid":
+        ssm_lib.declare_ssm(t, "blocks/ssm", cfg, L)
+        t.add("blocks/fuse_scale", (L, 2, d), ("layers", None, None),
+              init="ones")
+    if cfg.is_moe:
+        moe_lib.declare_moe(t, "blocks/moe", cfg, L)
+    else:
+        _declare_mlp(t, "blocks/mlp", cfg, L)
+
+    if cfg.enc_dec:                                       # whisper
+        Le = cfg.enc_layers
+        t.add("enc_blocks/norm1", (Le, d), ("layers", None), init="ones")
+        t.add("enc_blocks/norm2", (Le, d), ("layers", None), init="ones")
+        _declare_attn(t, "enc_blocks/attn", cfg, Le)
+        _declare_mlp(t, "enc_blocks/mlp", cfg, Le)
+        t.add("enc_final_norm", (d,), (None,), init="ones")
+        t.add("blocks/norm3", (L, d), ("layers", None), init="ones")
+        _declare_attn(t, "blocks/xattn", cfg, L, cross=True)
+    return t
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, x, prefix=""):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias and "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, cfg.n_heads, hd),
+            k.reshape(B, S, cfg.n_kv_heads, hd),
+            v.reshape(B, S, cfg.n_kv_heads, hd))
+
+
+def _mlp(cfg, p, x):
+    act = activation(cfg.act)
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def _attn_block(cfg, p, x, positions, *, causal=True, is_global=None):
+    q, k, v = _project_qkv(cfg, p, x)
+    if cfg.rope_theta:
+        ang = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta,
+                          cfg.mrope_sections)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+    if CONTEXT_PARALLEL_AXIS is not None and q.shape[1] > 1:
+        # context parallelism: Q sequence-sharded; KV replicated on the
+        # model axis (one small GQA allgather instead of per-layer psums)
+        q = _cp_constrain(q, ("model", None, None))
+        k = _cp_constrain(k, (None, None, None))
+        v = _cp_constrain(v, (None, None, None))
+    o = attn_lib.attention(q, k, v, causal=causal, window=cfg.swa_window,
+                           chunk=cfg.attn_chunk, is_global=is_global)
+    return o.reshape(*x.shape[:2], -1) @ p["wo"], (k, v)
+
+
+def block_fwd(cfg: ArchConfig, p: Dict[str, Any], x: jax.Array,
+              positions: jax.Array, is_global=None, enc_out=None
+              ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array], jax.Array]:
+    """One decoder block. Returns (x, (k,v) for cache, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    nx = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a_out, kv = _attn_block(cfg, p["attn"], nx, positions,
+                                is_global=is_global)
+        s_out, s_state = ssm_lib.ssm_scan(cfg, p["ssm"], nx)
+        kv = (kv, s_state)                                # cache needs both
+        fs = p["fuse_scale"]
+        x = x + 0.5 * (fs[0] * a_out + fs[1] * s_out)
+    else:
+        a_out, kv = _attn_block(cfg, p["attn"], nx, positions,
+                                is_global=is_global)
+        x = x + a_out
+    if enc_out is not None:                               # whisper cross-attn
+        nx = rms_norm(x, p["norm3"], cfg.norm_eps)
+        B, Se, _ = enc_out.shape
+        hd = cfg.resolved_head_dim
+        q = (nx @ p["xattn"]["wq"]).reshape(
+            x.shape[0], x.shape[1], cfg.n_heads, hd)
+        kx = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        vx = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        o = attn_lib.attention(q, kx, vx, causal=False, chunk=cfg.attn_chunk)
+        x = x + o.reshape(*x.shape[:2], -1) @ p["xattn"]["wo"]
+    nx = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        m_out, aux = moe_lib.moe_ffn(cfg, p["moe"], nx)
+        x = x + m_out
+    else:
+        x = x + _mlp(cfg, p["mlp"], nx)
+    # NOTE (SPerf-A iteration 4, REFUTED): constraining the residual stream
+    # to be sequence-sharded at block boundaries (Megatron-SP, hoping for
+    # allgather+reduce-scatter at half the all-reduce volume) made GSPMD
+    # insert extra resharding instead: collective operand bytes went
+    # 5.9e11 -> 1.6e12 on the 8x8 debug mesh. Reverted; see EXPERIMENTS.md.
+    return x, kv, aux
+
+
+def rwkv_block_fwd(cfg, p, x, state=None, x_tm=None, x_cm=None):
+    nx = rms_norm(x, p["norm1"], cfg.norm_eps)
+    o, state, x_last_tm = rwkv_lib.time_mix(cfg, p["rwkv"], nx, state, x_tm)
+    x = x + o
+    nx = rms_norm(x, p["norm2"], cfg.norm_eps)
+    o, x_last_cm = rwkv_lib.channel_mix(cfg, p["rwkv"], nx, x_cm)
+    return x + o, state, x_last_tm, x_last_cm
+
+
+# --------------------------------------------------------------------------
+# full forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def embed_inputs(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, jax.Array]:
+    tokens = batch["tokens"]
+    x = params["embed"]["tokens"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if not cfg.rope_theta and not cfg.mrope_sections:
+        # whisper-style absolute positions (no rope in the stack)
+        pos1d = positions if positions.ndim == 2 else positions[..., 0]
+        x = x + sinusoidal_at(pos1d, cfg.d_model, x.dtype)
+    return x, positions
+
+
+def _scan_blocks(cfg, blocks, x, positions, enc_out=None, kind="train"):
+    L = cfg.n_layers
+    layer_ids = jnp.arange(L)
+
+    def body(carry, inp):
+        xc, aux_acc = carry
+        lp, lid = inp
+        is_global = None
+        if cfg.swa_window and cfg.global_attn_every:
+            is_global = (lid % cfg.global_attn_every) == 0
+        xc, kv, aux = block_fwd(cfg, lp, xc, positions,
+                                is_global=is_global, enc_out=enc_out)
+        out = kv if kind == "prefill" else None
+        return (xc, aux_acc + aux), out
+
+    body_fn = body
+    if cfg.remat and kind in ("train", "hidden"):
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), kvs = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                 (blocks, layer_ids))
+    return x, aux, kvs
+
+
+def _scan_rwkv_blocks(cfg, blocks, x, kind="train"):
+    def body(carry, lp):
+        xc = carry
+        xc, state, xt, xc_ = rwkv_block_fwd(cfg, lp, xc)
+        out = (state, xt, xc_) if kind == "prefill" else None
+        return xc, out
+
+    body_fn = body
+    if cfg.remat and kind in ("train", "hidden"):
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = jax.lax.scan(body_fn, x, blocks)
+    return x, jnp.zeros((), jnp.float32), states
+
+
+def encode(cfg: ArchConfig, params, enc_frames: jax.Array) -> jax.Array:
+    """Whisper encoder: frames (B,T,d) post-conv-stub, bidirectional attn."""
+    x = enc_frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(xc, lp):
+        nx = rms_norm(xc, lp["norm1"], cfg.norm_eps)
+        a, _ = _attn_block(cfg, lp["attn"], nx, positions, causal=False)
+        xc = xc + a
+        nx = rms_norm(xc, lp["norm2"], cfg.norm_eps)
+        return xc + _mlp(cfg, lp["mlp"], nx), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def cast_params(cfg: ArchConfig, params):
+    """fp32 master params -> compute dtype (grads upcast automatically)."""
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 else p, params)
+
+
+def forward(cfg: ArchConfig, params, batch, kind="train"):
+    """Returns (logits, moe_aux, kvs-or-None)."""
+    params = cast_params(cfg, params)
+    x, positions = embed_inputs(cfg, params, batch)
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, batch["enc_frames"])
+    else:
+        enc_out = None
+    if cfg.attn_free:
+        x, aux, kvs = _scan_rwkv_blocks(cfg, params["blocks"], x, kind)
+    else:
+        x, aux, kvs = _scan_blocks(cfg, params["blocks"], x, positions,
+                                   enc_out=enc_out, kind=kind)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if kind == "hidden":
+        return x, aux, (kvs, enc_out)
+    head = (params["embed"]["tokens"].T if cfg.tie_embeddings
+            else params["head"]["w"])
+    logits = x @ head.astype(x.dtype)
+    return logits, aux, (kvs, enc_out)
+
+
+LOSS_CHUNK = 512
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    """Next-token CE with *chunked* logits: the (B,S,V) tensor is never
+    materialized — the head matmul + log-softmax run per sequence chunk
+    under jax.checkpoint, so backward recomputes one chunk at a time.
+    (For vocab=152k this saves ~5GB/device at 4k seq; see SPerf.)"""
+    hidden, aux, _ = forward(cfg, params, batch, kind="hidden")
+    labels = batch["labels"]
+    head = (params["embed"]["tokens"].T if cfg.tie_embeddings
+            else params["head"]["w"]).astype(hidden.dtype)
+
+    B, S, d = hidden.shape
+    c = min(LOSS_CHUNK, S)
+    if S % c:
+        c = S
+
+    @jax.checkpoint
+    def chunk_nll(h_chunk, l_chunk):
+        logits = (h_chunk @ head).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, l_chunk[..., None], axis=-1)[..., 0]
+        mask = (l_chunk >= 0).astype(jnp.float32)
+        return (nll * mask).sum(), mask.sum()
+
+    def body(carry, inp):
+        tot, cnt = carry
+        h_chunk, l_chunk = inp
+        s, n = chunk_nll(h_chunk, l_chunk)
+        return (tot + s, cnt + n), None
+
+    hs = hidden.reshape(B, S // c, c, d).swapaxes(0, 1)
+    ls = labels.reshape(B, S // c, c).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    total = loss + MOE_AUX_WEIGHT * aux
+    return total, {"loss": loss, "moe_aux": aux}

@@ -1,0 +1,132 @@
+"""Graph abstraction, GNN zoo, two-stage model, DSE algorithms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.accel import apps
+from repro.core import dse, gnn, graph as graph_lib, models
+
+
+def test_kmeans_graph_merging():
+    naive = graph_lib.build_graph(apps.KMEANS, simplify=False)
+    simp = graph_lib.build_graph(apps.KMEANS, simplify=True)
+    assert len(simp.node_ids) < len(naive.node_ids)
+    # three divs -> one, three center mems -> one (Fig 2)
+    assert sum(k == "div" for k in simp.kinds) == 1
+    assert sum(k == "mem" for k in simp.kinds) < \
+        sum(k == "mem" for k in naive.kinds)
+    # arithmetic units never merged
+    assert sum(not f for f in simp.fixed) == len(apps.KMEANS.unit_nodes)
+
+
+def test_normalized_adjacency_rows():
+    g = graph_lib.build_graph(apps.SOBEL)
+    a = graph_lib.normalized_adjacency(g.adj)
+    assert np.all(np.isfinite(a))
+    assert a.shape[0] == a.shape[1]
+    assert np.allclose(a, a.T)
+
+
+@pytest.mark.parametrize("arch", ["gcn", "gsae", "gat", "mpnn"])
+def test_gnn_forward_shapes(arch):
+    cfg = gnn.GNNConfig(arch=arch, n_layers=2, hidden=16, feature_dim=8,
+                        out_dim=3)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    B, N = 4, 10
+    adj = jnp.ones((B, N, N)) / N
+    x = jnp.ones((B, N, 8))
+    mask = jnp.ones((B, N))
+    out = gnn.apply(cfg, params, adj, x, mask)
+    assert out.shape == (B, 3)
+    node_cfg = gnn.GNNConfig(arch=arch, n_layers=2, hidden=16,
+                             feature_dim=8, out_dim=1, node_level=True)
+    np_ = gnn.init_params(jax.random.PRNGKey(0), node_cfg)
+    out = gnn.apply(node_cfg, np_, adj, x, mask)
+    assert out.shape == (B, N, 1)
+
+
+def test_gnn_padding_invariance():
+    """Masked padding nodes must not change the graph-level output."""
+    cfg = gnn.GNNConfig(arch="gsae", n_layers=2, hidden=16, feature_dim=8)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    adj_small = np.zeros((1, 6, 6), np.float32)
+    adj_small[0, :4, :4] = rng.random((4, 4))
+    x_small = np.zeros((1, 6, 8), np.float32)
+    x_small[0, :4] = rng.standard_normal((4, 8))
+    mask = np.zeros((1, 6), np.float32)
+    mask[0, :4] = 1
+    out1 = gnn.apply(cfg, params, jnp.asarray(adj_small),
+                     jnp.asarray(x_small), jnp.asarray(mask))
+    # garbage in padded region
+    x_dirty = x_small.copy()
+    x_dirty[0, 4:] = 99.0
+    out2 = gnn.apply(cfg, params, jnp.asarray(adj_small),
+                     jnp.asarray(x_dirty), jnp.asarray(mask))
+    assert jnp.allclose(out1, out2, atol=1e-5)
+
+
+def test_two_stage_crit_injection():
+    cfg = models.TwoStageConfig(gnn=gnn.GNNConfig(
+        arch="gsae", n_layers=1, hidden=8, feature_dim=12))
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    B, N = 3, 6
+    adj = jnp.ones((B, N, N)) / N
+    x = jnp.zeros((B, N, 12))
+    mask = jnp.ones((B, N))
+    y, logits = models.predict(cfg, params, adj, x, mask)
+    assert y.shape == (B, len(models.TARGETS))
+    assert logits.shape == (B, N)
+    teacher = jnp.ones((B, N))
+    y2, _ = models.predict(cfg, params, adj, x, mask, teacher_crit=teacher)
+    assert not jnp.allclose(y, y2)     # crit feature actually flows
+
+
+# --------------------------------------------------------------------------
+# DSE
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30))
+def test_pareto_front_no_dominated(n):
+    rng = np.random.default_rng(n)
+    F = rng.random((n, 3))
+    configs = [tuple(r) for r in rng.integers(0, 5, (n, 4))]
+    pc, po = dse.pareto_front(configs, F)
+    for p in po:
+        assert not np.any(np.all(F <= p, 1) & np.any(F < p, 1))
+
+
+def test_non_dominated_sort_layers():
+    F = np.array([[0.0, 0.0], [1.0, 1.0], [0.0, 1.0], [2.0, 2.0]])
+    fronts = dse.non_dominated_sort(F)
+    assert 0 in fronts[0]
+    assert 3 in fronts[-1]
+
+
+def test_das_dennis_points():
+    pts = dse.das_dennis(3, 4)
+    assert np.allclose(pts.sum(1), 1.0)
+    assert len(pts) == 15
+
+
+def _toy_eval(configs):
+    # 2-obj: minimize (sum, max-spread) over 6 dims of 0..9
+    a = np.asarray(configs, np.float64)
+    return np.stack([a.sum(1), 9 * 6 - a.sum(1) + a.std(1)], 1)
+
+
+@pytest.mark.parametrize("sampler", ["random", "nsga2", "nsga3", "tpe"])
+def test_samplers_run(sampler):
+    res = dse.SAMPLERS[sampler]([10] * 6, _toy_eval, 300, seed=0)
+    assert len(res.pareto_configs) >= 1
+    assert res.pareto_objs.shape[1] == 2
+
+
+def test_nsga3_beats_random_on_toy():
+    f_r = dse.run_random([10] * 8, _toy_eval, 600, seed=1)
+    f_n = dse.run_nsga([10] * 8, _toy_eval, 600, seed=1, pop=32)
+    # hypervolume proxy: best sum objective reached
+    assert f_n.pareto_objs[:, 0].min() <= f_r.pareto_objs[:, 0].min() + 3

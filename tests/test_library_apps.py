@@ -1,0 +1,109 @@
+"""Library characterization, pruning, accelerator apps, synthesis oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.accel import apps, library as lib, synth
+from repro.core import pruning
+from repro.data import images
+
+
+def test_table_iii_counts():
+    full = lib.full_library()
+    for kind, n in lib.TABLE_III.items():
+        assert len(full[kind]) == n, kind
+
+
+def test_ppa_positive_and_trunc_monotone():
+    entries = lib.build_library("add8")
+    for e in entries:
+        assert e.area > 0 and e.power > 0 and e.latency > 0
+    truncs = sorted((e for e in entries if e.inst.family == "trunc"),
+                    key=lambda e: e.inst.level)
+    areas = [e.area for e in truncs]
+    assert areas == sorted(areas, reverse=True)   # more trunc -> less area
+
+
+def test_invalid_prune_no_dominated_left():
+    entries = lib.build_library("mul8")
+    kept = pruning.invalid_prune(entries)
+    V = np.stack([e.feature_vector for e in kept])
+    for i in range(len(kept)):
+        for j in range(len(kept)):
+            if i != j:
+                assert not (np.all(V[j] <= V[i]) and np.any(V[j] < V[i]))
+
+
+def test_redundant_prune_shrinks_and_keeps_exact():
+    entries = lib.build_library("add12")
+    inv = pruning.invalid_prune(entries)
+    red = pruning.redundant_prune(inv, theta=0.5)
+    assert len(red) <= len(inv)
+    assert any(e.mse == 0 for e in red)
+
+
+def test_prune_library_monotone_spaces():
+    _, report = pruning.prune_library()
+    for kind, rep in report.items():
+        assert rep["initial"] >= rep["after_invalid"] >= 1
+        assert rep["after_invalid"] >= rep["after_redundant"] >= 1
+
+
+@pytest.fixture(scope="module")
+def imgset():
+    imgs = images.image_set(2, 32)
+    return (jnp.asarray(images.gray(imgs)),
+            jnp.asarray(imgs.astype(np.int32)))
+
+
+@pytest.mark.parametrize("name", ["sobel", "gaussian", "kmeans"])
+def test_exact_accelerator_ssim_is_one(name, imgset):
+    g, rgb = imgset
+    app = apps.APPS[name]
+    inp = rgb if name == "kmeans" else g
+    acc = apps.accuracy_ssim(app, apps.exact_choice(app), inp)
+    assert acc == pytest.approx(1.0, abs=1e-6)
+
+
+@pytest.mark.parametrize("name", ["sobel", "gaussian", "kmeans"])
+def test_worst_config_degrades(name, imgset):
+    g, rgb = imgset
+    app = apps.APPS[name]
+    inp = rgb if name == "kmeans" else g
+    worst = {n.id: max(lib.build_library(n.kind), key=lambda e: e.mse)
+             for n in app.unit_nodes}
+    assert apps.accuracy_ssim(app, worst, inp) < 0.99
+
+
+def test_table_ii_unit_counts():
+    by_kind = {}
+    for n in apps.SOBEL.unit_nodes:
+        by_kind[n.kind] = by_kind.get(n.kind, 0) + 1
+    assert by_kind == {"add8": 2, "add12": 2, "sub10": 1}
+    assert len(apps.GAUSSIAN.unit_nodes) == 17
+    assert len(apps.KMEANS.unit_nodes) == 16
+
+
+def test_synthesis_oracle_properties():
+    app = apps.KMEANS
+    choice = apps.exact_choice(app)
+    rep = synth.synthesize(app, choice)
+    assert rep["latency"] > 0 and rep["area"] > 0 and rep["power"] > 0
+    assert rep["critical_nodes"]
+    # area is (approximately) the sum of node areas
+    total = sum(p["area"] for p in synth.node_ppa(app, choice).values())
+    assert rep["area"] == pytest.approx(total, rel=0.01)
+    # determinism
+    rep2 = synth.synthesize(app, choice)
+    assert rep2["latency"] == rep["latency"]
+
+
+def test_output_ranges(imgset):
+    g, rgb = imgset
+    out = apps.SOBEL.run(apps.make_impls(apps.SOBEL,
+                                         apps.exact_choice(apps.SOBEL)), g)
+    assert int(out.min()) >= 0 and int(out.max()) <= 255
+    out = apps.GAUSSIAN.run(apps.make_impls(
+        apps.GAUSSIAN, apps.exact_choice(apps.GAUSSIAN)), g)
+    assert int(out.min()) >= 0 and int(out.max()) <= 255

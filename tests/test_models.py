@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests (reduced configs) + decode/forward parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REDUCED_ARCHS
+from repro.configs.base import ShapeConfig
+from repro.models import decoding, transformer
+
+
+def make_batch(cfg, B=2, S=16, train=True, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if train:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_vision_tokens, cfg.d_model)) * .02,
+            jnp.bfloat16)
+        if cfg.mrope_sections:
+            pos = np.broadcast_to(np.arange(S)[None, :, None], (B, S, 3))
+            batch["positions"] = jnp.asarray(pos, jnp.int32)
+    if cfg.enc_dec:
+        batch["enc_frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_len, cfg.d_model)) * .02,
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED_ARCHS))
+def test_smoke_forward_train(name):
+    cfg = REDUCED_ARCHS[name]
+    params = transformer.build_param_table(cfg).init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits, aux, _ = transformer.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, metrics = transformer.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED_ARCHS))
+def test_smoke_train_step_updates(name):
+    from repro.launch import steps as steps_lib
+    cfg = REDUCED_ARCHS[name]
+    shape = ShapeConfig("t", 16, 2, "train", grad_accum=2)
+    from repro.optim import adamw
+    params = transformer.build_param_table(cfg).init(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    step = steps_lib.make_train_step(cfg, shape)
+    batch = make_batch(cfg, 2, 16)
+    p2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed (warmup lr is tiny: exact-inequality check)
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert changed
+
+
+@pytest.mark.parametrize("name", sorted(REDUCED_ARCHS))
+def test_decode_forward_parity(name):
+    """prefill(S/2) + stepwise decode must match the full forward pass."""
+    cfg = REDUCED_ARCHS[name]
+    params = transformer.build_param_table(cfg).init(jax.random.PRNGKey(1))
+    B, S = 2, 16
+    half = S // 2
+    batch = make_batch(cfg, B, S, train=False, seed=3)
+    full_logits, _, _ = transformer.forward(cfg, params, batch,
+                                            kind="train")
+
+    pre_batch = {k: (v[:, :half] if k in ("tokens", "positions") else v)
+                 for k, v in batch.items()}
+    if cfg.n_vision_tokens:   # keep vision prefix within the prefill half
+        pre_batch["vision_embeds"] = batch["vision_embeds"][:, :4]
+    last, cache = decoding.prefill(cfg, params, pre_batch, max_len=S)
+    np.testing.assert_allclose(
+        np.asarray(last, np.float32),
+        np.asarray(full_logits[:, half - 1], np.float32),
+        rtol=0.1, atol=0.15)
+
+    for pos in range(half, S):
+        toks = batch["tokens"][:, pos:pos + 1]
+        logits, cache = decoding.decode_step(cfg, params, cache, toks,
+                                             jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, pos], np.float32),
+            rtol=0.1, atol=0.15,
+            err_msg=f"{name} decode mismatch at pos {pos}")
+
+
+def test_moe_balanced_dispatch_matches_dense():
+    """With capacity >> tokens, scatter-MoE == dense per-token expert mix."""
+    from repro.models import moe as moe_lib
+    cfg = REDUCED_ARCHS["mixtral-8x7b"]
+    t = transformer.build_param_table(cfg)
+    params = t.init(jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda a: a[0], params["blocks"]["moe"])
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    y, aux = moe_lib.moe_ffn(cfg, lp, x, deterministic_capacity=16 * 2)
+    # dense reference
+    logits = x.reshape(-1, cfg.d_model) @ lp["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gv, gi = jax.lax.top_k(probs, cfg.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    xt = x.reshape(-1, cfg.d_model)
+    ref = np.zeros_like(np.asarray(xt))
+    for tok in range(xt.shape[0]):
+        acc = 0
+        for j in range(cfg.top_k):
+            e = int(gi[tok, j])
+            h = jax.nn.silu(xt[tok] @ lp["w_gate"][e]) * \
+                (xt[tok] @ lp["w_up"][e])
+            acc = acc + float(gv[tok, j]) * (h @ lp["w_down"][e])
+        ref[tok] = np.asarray(acc)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, cfg.d_model), ref,
+                               rtol=2e-2, atol=2e-2)
+    assert float(aux) > 0
+
+
+def test_attention_chunked_equals_full():
+    from repro.models import attention as A
+    rng = np.random.default_rng(0)
+    B, S, H, KV, D = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    full = A.full_attention(q, k, v, causal=True)
+    for chunk in (8, 16, 32):
+        ck = A.chunked_attention(q, k, v, causal=True, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(full),
+                                   rtol=1e-4, atol=1e-4)
+        bk = A.blocked_attention(q, k, v, causal=True, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(bk), np.asarray(full),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_attention_swa_window():
+    from repro.models import attention as A
+    rng = np.random.default_rng(1)
+    B, S, H, KV, D = 1, 32, 2, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    w = 8
+    full = A.full_attention(q, k, v, causal=True, window=w)
+    blocked = A.blocked_attention(q, k, v, causal=True, window=w, chunk=8)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_scan_vs_decode_parity():
+    from repro.models import rwkv as R
+    cfg = REDUCED_ARCHS["rwkv6-3b"]
+    t = transformer.build_param_table(cfg)
+    params = t.init(jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda a: a[0], params["blocks"]["rwkv"])
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 6, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_seq, state_seq, _ = R.time_mix(cfg, lp, x)
+    # stepwise
+    state = None
+    x_prev = jnp.zeros((1, cfg.d_model), jnp.float32)
+    outs = []
+    for i in range(6):
+        yi, state, x_prev = R.time_mix(cfg, lp, x[:, i:i + 1], state,
+                                       x_prev)
+        outs.append(yi)
+    y_step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-4)

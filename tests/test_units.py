@@ -1,0 +1,80 @@
+"""Unit-level tests for the approximate arithmetic library (+ hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.accel import library as lib
+from repro.accel import units as U
+
+
+def test_exact_adders():
+    a = jnp.arange(256, dtype=jnp.int32)
+    b = jnp.arange(255, -1, -1, dtype=jnp.int32)
+    assert (U.add_exact(a, b, 8) == a + b).all()
+    assert (U.sub_exact(a, b, 8) == a - b).all()
+    assert (U.mul_exact(a, b, 8, 8) == a * b).all()
+
+
+def test_exact_sqrt():
+    x = jnp.arange(1 << 16, dtype=jnp.int32)
+    r = U.sqrt_exact(x, 18)
+    rn = np.asarray(r, np.int64)
+    xn = np.asarray(x, np.int64)
+    assert (rn * rn <= xn).all()
+    assert ((rn + 1) * (rn + 1) > xn).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(1, 7))
+def test_trunc_adder_error_bound(a, b, k):
+    aj = jnp.int32(a)
+    bj = jnp.int32(b)
+    err = int(U.add_trunc(aj, bj, 8, k)) - (a + b)
+    assert abs(err) < 2 ** (k + 1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(1, 6))
+def test_loa_error_bound(a, b, k):
+    err = int(U.add_loa(jnp.int32(a), jnp.int32(b), 8, k)) - (a + b)
+    assert abs(err) < 2 ** (k + 1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(1, 4))
+def test_broken_mult_underestimates(a, b, k):
+    approx = int(U.mul_broken(jnp.int32(a), jnp.int32(b), 8, 8, k))
+    exact = a * b
+    assert approx <= exact
+    assert exact - approx <= a * (2 ** k - 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, (1 << 18) - 1))
+def test_sqrt_itrunc_underestimates(x):
+    approx = int(U.sqrt_itrunc(jnp.int32(x), 18, 2))
+    exact = int(U.sqrt_exact(jnp.int32(x), 18))
+    assert approx <= exact + 1
+    assert exact - approx <= 8
+
+
+def test_aca1_is_functionally_exact():
+    a = jnp.arange(256, dtype=jnp.int32)[:, None]
+    b = jnp.arange(256, dtype=jnp.int32)[None, :]
+    assert (U.add_aca(a, b, 8, 1) == a + b).all()
+
+
+def test_mitchell_relative_error():
+    a = jnp.arange(1, 256, dtype=jnp.int32)[:, None]
+    b = jnp.arange(1, 256, dtype=jnp.int32)[None, :]
+    approx = np.asarray(U.mul_mitchell(a, b, 8, 8, 0), np.float64)
+    exact = np.asarray(a * b, np.float64)
+    rel = np.abs(approx - exact) / exact
+    assert rel.max() < 0.2          # Mitchell worst case ~11.1% + rounding
+
+
+def test_error_metrics_exact_unit_zero():
+    for kind in lib.TABLE_III:
+        e = lib.build_library(kind)[0]
+        assert e.mse == 0.0 and e.mae == 0.0 and e.wce == 0.0
