@@ -1,0 +1,199 @@
+"""Throughput benchmark: batched `SurrogateEngine` vs naive per-config eval.
+
+The DSE hot loop evaluates thousands to millions of configs through the
+GNN surrogate; this benchmark quantifies what the engine subsystem buys
+over the naive path the pipeline used before (per-config Python
+featurization + one jit dispatch per config):
+
+    PYTHONPATH=src python benchmarks/engine_bench.py [--smoke]
+        [--batch 1024] [--out BENCH_engine.json]
+
+Measures
+  * naive_cps    — configs/sec evaluating one config per call through
+                   `dataset.features_for_configs` + jit'd `models.predict`
+                   (timed on a subsample, it is that slow);
+  * batched_cps  — configs/sec through the engine on a cold cache at
+                   ``--batch`` configs per call;
+  * cached_cps   — same batch replayed permuted (memo-cache serve rate);
+  * ragged chunk accounting on a non-power-of-two batch.
+
+Writes a JSON report (default BENCH_engine.json in the repo root) and
+prints CSV-ish rows like benchmarks/run.py. `--smoke` shrinks dataset and
+training (CI uses it); the measured batch size stays >= 1024 so the
+headline speedup is comparable across modes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def build_surrogate(n_samples: int, epochs: int, app_name: str = "sobel",
+                    seed: int = 0):
+    """Train a small two-stage GNN surrogate; returns everything the
+    engine and the naive path need."""
+    from repro.accel import apps as apps_lib
+    from repro.core import dataset as ds_lib
+    from repro.core import gnn, models, pruning, training
+
+    pruned, _ = pruning.prune_library()
+    app = apps_lib.APPS[app_name]
+    entries = {k: pruned[k] for k in {n.kind for n in app.unit_nodes}}
+    ds = ds_lib.build(app_name, n_samples=n_samples, seed=seed,
+                      lib_entries=entries)
+    tr, _ = ds.split(0.9)
+    two_cfg = models.TwoStageConfig(gnn=gnn.GNNConfig(
+        arch="gsae", n_layers=3, hidden=64, feature_dim=ds.x.shape[-1]))
+    params = training.fit_two_stage(
+        two_cfg, tr, training.TrainConfig(epochs=epochs, seed=seed))
+    return app, entries, ds, two_cfg, params
+
+
+def naive_evaluator(two_cfg, params, ds, app, entries):
+    """The pre-engine evaluation path: per-call Python featurization and a
+    jit call whose shape follows the batch (so B=1 calls dominate)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import dataset as ds_lib
+    from repro.core import models
+
+    jit_predict = jax.jit(lambda a, x, m: models.predict(
+        two_cfg, params, a, x, m)[0])
+
+    def evaluate(configs):
+        A, X, M = ds_lib.features_for_configs(ds, app, entries, configs)
+        y = np.asarray(jit_predict(jnp.asarray(A), jnp.asarray(X),
+                                   jnp.asarray(M)))
+        y = ds.denorm_y(y)
+        y[:, 3] = 1 - y[:, 3]
+        return y
+
+    return evaluate
+
+
+def sample_configs(app, entries, n: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    sizes = [len(entries[node.kind]) for node in app.unit_nodes]
+    return [tuple(int(rng.integers(0, s)) for s in sizes) for _ in range(n)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small dataset/training for CI")
+    ap.add_argument("--batch", type=int, default=1024,
+                    help="engine batch size (acceptance floor: 1024)")
+    ap.add_argument("--naive-n", type=int, default=48,
+                    help="configs timed through the naive per-config path")
+    ap.add_argument("--chunk", type=int, default=512,
+                    help="engine chunk size")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+
+    from repro.core.engine import SurrogateEngine
+
+    n_samples, epochs = (160, 6) if args.smoke else (600, 25)
+    t0 = time.time()
+    app, entries, ds, two_cfg, params = build_surrogate(n_samples, epochs)
+    setup_s = time.time() - t0
+    print(f"engine_bench,setup,n_samples={n_samples},epochs={epochs},"
+          f"time_s={setup_s:.1f}")
+
+    configs = sample_configs(app, entries, args.batch)
+
+    def best_of(fn, reps=3):
+        """Min wall time over reps — damps scheduler noise on shared CPUs
+        (a single slow run must not flip the speedup verdict)."""
+        out, best = None, float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return out, best
+
+    # -- naive per-config path (warm up jit on B=1 first) ------------------
+    naive = naive_evaluator(two_cfg, params, ds, app, entries)
+    naive([configs[0]])
+    n_naive = min(args.naive_n, len(configs))
+    naive_rows, naive_s = best_of(lambda: np.concatenate(
+        [naive([c]) for c in configs[:n_naive]], 0))
+    naive_cps = n_naive / naive_s
+    print(f"engine_bench,naive,configs={n_naive},time_s={naive_s:.2f},"
+          f"configs_per_sec={naive_cps:.1f}")
+
+    # -- batched engine, cold cache ---------------------------------------
+    engine = SurrogateEngine.from_gnn(two_cfg, params, ds, app, entries,
+                                      chunk_size=args.chunk)
+    engine(configs[:args.chunk])        # compile the full-chunk shape
+
+    def batched_cold():
+        engine.clear_cache()
+        engine.reset_stats()
+        return engine(configs)
+
+    batched_rows, batched_s = best_of(batched_cold)
+    batched_cps = len(configs) / batched_s
+    cold = engine.stats.as_dict()
+    print(f"engine_bench,batched,backend={engine.backend},"
+          f"configs={len(configs)},time_s={batched_s:.2f},"
+          f"configs_per_sec={batched_cps:.1f},chunks={cold['chunks']}")
+
+    # engine and naive path must agree (same model, same features)
+    np.testing.assert_allclose(batched_rows[:n_naive], naive_rows,
+                               rtol=1e-4, atol=1e-4)
+
+    # -- warm cache replay (permuted order) --------------------------------
+    engine.reset_stats()
+    perm = [configs[i] for i in
+            np.random.default_rng(2).permutation(len(configs))]
+    t0 = time.time()
+    engine(perm)
+    cached_s = time.time() - t0
+    cached_cps = len(configs) / max(cached_s, 1e-9)
+    warm = engine.stats.as_dict()
+    print(f"engine_bench,cached,configs={len(configs)},"
+          f"time_s={cached_s:.3f},configs_per_sec={cached_cps:.0f},"
+          f"hit_rate={warm['cache_hit_rate']:.2f}")
+
+    # -- ragged final chunk accounting -------------------------------------
+    engine.clear_cache()
+    engine.reset_stats()
+    ragged = sample_configs(app, entries, args.chunk + args.chunk // 3,
+                            seed=3)
+    engine(ragged)
+    rag = engine.stats.as_dict()
+    print(f"engine_bench,ragged,configs={len(ragged)},"
+          f"chunks={rag['chunks']},padded={rag['padded']}")
+
+    speedup = batched_cps / naive_cps
+    report = {
+        "mode": "smoke" if args.smoke else "full",
+        "app": app.name,
+        "backend": engine.backend,
+        "batch": len(configs),
+        "chunk_size": args.chunk,
+        "naive_configs_per_sec": round(naive_cps, 1),
+        "batched_configs_per_sec": round(batched_cps, 1),
+        "cached_configs_per_sec": round(cached_cps, 1),
+        "speedup_batched_vs_naive": round(speedup, 1),
+        "cache_hit_rate_on_replay": warm["cache_hit_rate"],
+        "ragged": {"configs": len(ragged), "chunks": rag["chunks"],
+                   "padded_rows": rag["padded"]},
+        "setup_s": round(setup_s, 1),
+    }
+    out = Path(args.out)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"engine_bench,summary,speedup={speedup:.1f}x,"
+          f"report={out}")
+    if speedup < 5.0:
+        raise SystemExit(
+            f"engine_bench: batched speedup {speedup:.1f}x below the 5x "
+            f"acceptance floor")
+
+
+if __name__ == "__main__":
+    main()

@@ -145,34 +145,36 @@ def fig5_critical_path_ablation(app="gaussian"):
 
 
 def fig6_sampling_methods(app="sobel", budget=1000):
-    print("# Fig 6: sampler comparison on sobel (surrogate-evaluated)")
+    print("# Fig 6: sampler comparison on sobel (batched surrogate engine)")
     ds, entries, _ = _dataset(app)
     cfg, params, _, _ = _train_gnn(ds)
-    import jax
-    import jax.numpy as jnp
+    from repro.core.engine import SurrogateEngine
     app_def = apps_lib.APPS[app]
-    jit_predict = jax.jit(lambda a, x, m: models.predict(
-        cfg, params, a, x, m)[0])
-
-    def evaluate(configs):
-        A, X, M = ds_lib.features_for_configs(ds, app_def, entries, configs)
-        y = np.asarray(jit_predict(jnp.asarray(A), jnp.asarray(X),
-                                   jnp.asarray(M)))
-        y = ds.denorm_y(y)
-        y[:, 3] = 1 - y[:, 3]
-        return y
+    engine = SurrogateEngine.from_gnn(cfg, params, ds, app_def, entries)
 
     sizes = [len(entries[n.kind]) for n in app_def.unit_nodes]
+    # warm the jit cache for every bucket shape the samplers can hit, so no
+    # sampler's time_s is dominated by XLA compilation
+    rng = np.random.default_rng(0)
+    b = 1
+    while b <= engine.chunk_size:
+        engine([tuple(int(rng.integers(0, s)) for s in sizes)
+                for _ in range(b)])
+        b <<= 1
     for name in ("random", "tpe", "nsga2", "nsga3"):
+        engine.clear_cache()        # per-sampler timing fairness
+        engine.reset_stats()
         t0 = time.time()
-        res = dse.SAMPLERS[name](sizes, evaluate, budget, seed=0)
+        res = dse.SAMPLERS[name](sizes, engine, budget, seed=0)
         dt = time.time() - t0
         # hypervolume proxy vs a fixed reference point
         F = res.pareto_objs
         ref = np.array([3000.0, 600.0, 120.0, 1.0])
         hv = float(np.mean(np.prod(np.maximum(ref - F, 0) / ref, axis=1)))
+        s = res.stats or {}
         print(f"fig6,{name},pareto_n={len(F)},hv_proxy={hv:.4f},"
-              f"time_s={dt:.2f}")
+              f"time_s={dt:.2f},configs_s={s.get('configs_per_sec', 0):.0f},"
+              f"cache_hit={s.get('cache_hit_rate', 0):.2f}")
 
 
 def table4_fig4_pareto(apps=("sobel",), budget=None):
@@ -196,9 +198,12 @@ def table4_fig4_pareto(apps=("sobel",), budget=None):
                 sub = objs[:, [i, 3]]
                 pc, _ = dse.pareto_front(list(range(len(sub))), sub)
                 return len(pc)
+            eng = res.metrics.get("engine", {})
             print(f"table4,{app}/{surrogate},area_ssim={pair_count(0)},"
                   f"power_ssim={pair_count(1)},latency_ssim={pair_count(2)},"
-                  f"total={len(objs)},time_s={dt:.1f}")
+                  f"total={len(objs)},time_s={dt:.1f},"
+                  f"engine_cps={eng.get('configs_per_sec', 0):.0f},"
+                  f"cache_hit={eng.get('cache_hit_rate', 0):.2f}")
             val = pipe.validate_pareto(res, 5)
             print(f"fig4,{app}/{surrogate},"
                   f"oracle_rel_err={val['mean_rel_err']:.3f}")

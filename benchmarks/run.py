@@ -4,7 +4,8 @@ benches. Prints `name,value,derived` CSV rows.
     PYTHONPATH=src python -m benchmarks.run [--quick] [--sections a,b,...]
 
 Sections: tables (II,III,VIII), models (V,VI,VII,fig5), dse (IV,fig4,fig6),
-kernels, lm, roofline, bridge.
+kernels, lm, roofline, bridge, engine (batched-vs-naive surrogate
+throughput, see benchmarks/engine_bench.py).
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller datasets/epochs")
     ap.add_argument("--sections", default="tables,models,dse,kernels,lm,"
-                                          "roofline,bridge")
+                                          "roofline,bridge,engine")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as T
@@ -50,6 +51,19 @@ def main() -> None:
         L.bench_roofline_summary()
     if "bridge" in sections:
         L.bench_lm_bridge()
+    if "engine" in sections:
+        from benchmarks import engine_bench
+        argv, sys.argv = sys.argv, ["engine_bench"] + (
+            ["--smoke"] if args.quick else [])
+        try:
+            engine_bench.main()
+        except SystemExit as e:
+            # the 5x acceptance gate is for CI (which runs engine_bench
+            # directly); a noise-sensitive threshold must not abort the
+            # rest of the benchmark report
+            print(f"engine_bench,gate,{e}")
+        finally:
+            sys.argv = argv
     print(f"# total benchmark time: {time.time() - t0:.1f}s")
 
 

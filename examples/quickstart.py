@@ -30,7 +30,17 @@ def main():
     print(f"  {res.space}")
     print("\n-- surrogate quality (Table V analog) --")
     for k, v in res.metrics.items():
+        if k == "engine":
+            continue
         print(f"  {k}: " + ", ".join(f"{m}={x:.3f}" for m, x in v.items()))
+    eng = res.metrics.get("engine", {})
+    if eng:
+        print("\n-- DSE evaluation engine --")
+        print(f"  backend={eng.get('backend')} "
+              f"configs/s={eng.get('configs_per_sec', 0):.0f} "
+              f"cache_hit_rate={eng.get('cache_hit_rate', 0):.2f} "
+              f"unique_evaluated={eng.get('evaluated', 0)} "
+              f"chunks={eng.get('chunks', 0)}")
     print(f"\n-- DSE: {len(res.pareto_configs)} Pareto points --")
     for cfg_idx, obj in list(zip(res.pareto_configs, res.pareto_objs))[:5]:
         print(f"  area={obj[0]:.0f} power={obj[1]:.0f} "

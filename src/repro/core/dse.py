@@ -6,6 +6,13 @@ ApproxPilot), the random-forest baseline (AutoAX), or the synthesis oracle
     [area, power, latency, 1 - ssim]
 Restart-on-stagnation: if the parent population survives unchanged for
 `stagnation` generations, fresh random samples are injected (Sec III-C).
+
+All samplers route evaluation through `repro.core.engine.SurrogateEngine`
+(see `as_engine`): plain callables are wrapped on entry, so every sampler
+gets config-key memoization — NSGA's re-evaluations of surviving parents
+and restart re-injections are free — plus chunked batching and throughput
+stats (`DSEResult.stats`). Pass a pre-built engine to share its cache
+across samplers, or a plain deterministic callable to get a private one.
 """
 from __future__ import annotations
 
@@ -21,10 +28,37 @@ EvalFn = Callable[[Sequence[Config]], np.ndarray]   # -> (n, n_obj)
 
 @dataclass
 class DSEResult:
+    """Outcome of one sampler run.
+
+    Attributes:
+        pareto_configs: non-dominated configs (objective-deduplicated).
+        pareto_objs:    matching (n, n_obj) objective rows.
+        evaluated:      evaluations *requested* by the sampler (budget
+                        accounting; cache hits inside the engine still
+                        count — see ``stats["evaluated"]`` for unique
+                        backend evaluations).
+        history:        reserved for per-generation progress traces.
+        stats:          `EngineStats.as_dict()` snapshot from the engine
+                        that served this run.
+    """
     pareto_configs: List[Config]
     pareto_objs: np.ndarray
     evaluated: int
     history: List[int] = field(default_factory=list)
+    stats: Optional[Dict] = None
+
+
+def as_engine(evaluate: EvalFn) -> "SurrogateEngine":
+    """Wrap a plain evaluator in a caching `SurrogateEngine` (idempotent).
+
+    The wrapper assumes `evaluate` is deterministic — true for all three
+    ApproxPilot evaluators and the LM-bridge oracle. A stochastic evaluator
+    should be pre-wrapped with ``SurrogateEngine(fn, cache=False)``.
+    """
+    from repro.core.engine import SurrogateEngine
+    if isinstance(evaluate, SurrogateEngine):
+        return evaluate
+    return SurrogateEngine(evaluate, backend="wrapped")
 
 
 # --------------------------------------------------------------------------
@@ -32,6 +66,11 @@ class DSEResult:
 # --------------------------------------------------------------------------
 
 def non_dominated_sort(F: np.ndarray) -> List[np.ndarray]:
+    """Fast non-dominated sorting of an (n, n_obj) minimization matrix.
+
+    Returns index arrays per front: ``fronts[0]`` is the Pareto set,
+    ``fronts[k]`` dominates only fronts > k.
+    """
     n = len(F)
     dominated_by = [[] for _ in range(n)]
     dom_count = np.zeros(n, np.int64)
@@ -59,6 +98,7 @@ def non_dominated_sort(F: np.ndarray) -> List[np.ndarray]:
 
 
 def crowding_distance(F: np.ndarray) -> np.ndarray:
+    """NSGA-II crowding distance per row of F (inf on objective extremes)."""
     n, m = F.shape
     d = np.zeros(n)
     for k in range(m):
@@ -71,6 +111,8 @@ def crowding_distance(F: np.ndarray) -> np.ndarray:
 
 def pareto_front(configs: Sequence[Config], F: np.ndarray
                  ) -> Tuple[List[Config], np.ndarray]:
+    """First non-dominated front of (configs, F), deduplicated on
+    (rounded) objective rows. Returns (configs, objectives)."""
     fronts = non_dominated_sort(F)
     idx = fronts[0] if fronts else np.arange(0)
     # dedupe identical objective rows
@@ -88,6 +130,8 @@ def pareto_front(configs: Sequence[Config], F: np.ndarray
 # --------------------------------------------------------------------------
 
 def das_dennis(n_obj: int, divisions: int) -> np.ndarray:
+    """Das-Dennis simplex-lattice reference directions for NSGA-III:
+    all points with coordinates k/divisions summing to 1."""
     pts = []
     for c in itertools.combinations(range(divisions + n_obj - 1),
                                     n_obj - 1):
@@ -156,12 +200,22 @@ def _crossover_mutate(parents: np.ndarray, sizes: Sequence[int],
 
 def run_random(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                seed: int = 0) -> DSEResult:
+    """Uniform random search baseline (Fig. 6 'random').
+
+    Args:
+        sizes:    per-dimension categorical cardinalities (one entry per
+                  arithmetic-unit node).
+        evaluate: batch evaluator or `SurrogateEngine`; wrapped via
+                  `as_engine` so duplicate draws cost nothing.
+        budget:   number of configs to sample.
+    """
+    engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
     configs = [tuple(rng.integers(0, s) for s in sizes)
                for _ in range(budget)]
-    F = evaluate(configs)
+    F = engine(configs)
     pc, po = pareto_front(configs, F)
-    return DSEResult(pc, po, budget)
+    return DSEResult(pc, po, budget, stats=engine.stats.as_dict())
 
 
 def run_tpe(sizes: Sequence[int], evaluate: EvalFn, budget: int,
@@ -169,11 +223,16 @@ def run_tpe(sizes: Sequence[int], evaluate: EvalFn, budget: int,
             ) -> DSEResult:
     """Tree-structured-Parzen-lite for categorical spaces (the 'Bayesian'
     sampler of Fig. 6): models P(dim=v | good) vs P(dim=v | bad) on a
-    scalarized objective and samples proportional to the ratio."""
+    scalarized objective and samples proportional to the ratio.
+
+    Evaluation goes through `as_engine`, so repeated proposals of already
+    seen configs are served from the memo cache.
+    """
+    engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
     X: List[Config] = [tuple(rng.integers(0, s) for s in sizes)
                        for _ in range(min(batch, budget))]
-    F = evaluate(X)
+    F = engine(X)
     while len(X) < budget:
         scal = (F / (np.abs(F).max(0) + 1e-12)).sum(1)
         order = np.argsort(scal)
@@ -188,19 +247,35 @@ def run_tpe(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         newc = [tuple(rng.choice(s, p=probs[d])
                       for d, s in enumerate(sizes))
                 for _ in range(min(batch, budget - len(X)))]
-        Fn = evaluate(newc)
+        Fn = engine(newc)
         X += newc
         F = np.concatenate([F, Fn], 0)
     pc, po = pareto_front(X, F)
-    return DSEResult(pc, po, budget)
+    return DSEResult(pc, po, budget, stats=engine.stats.as_dict())
 
 
 def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
              seed: int = 0, pop: int = 64, variant: str = "nsga3",
              stagnation: int = 5, ref_divisions: int = 6) -> DSEResult:
+    """NSGA-II / NSGA-III with restart-on-stagnation (the paper's DSE).
+
+    Args:
+        sizes:         per-dimension categorical cardinalities.
+        evaluate:      batch evaluator or `SurrogateEngine` (see
+                       `as_engine`); offspring that duplicate earlier
+                       individuals hit the engine's memo cache.
+        budget:        total evaluation requests before stopping.
+        pop:           population size (paper: 64).
+        variant:       "nsga2" (crowding distance) or "nsga3" (Das-Dennis
+                       niching, the paper's choice for 4 objectives).
+        stagnation:    generations of an unchanged parent population before
+                       half the population is replaced with fresh randoms.
+        ref_divisions: Das-Dennis divisions for the NSGA-III reference set.
+    """
+    engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
     P = np.stack([rng.integers(0, s, pop) for s in sizes], 1)
-    F = evaluate([tuple(r) for r in P])
+    F = engine([tuple(r) for r in P])
     evaluated = pop
     refs = das_dennis(F.shape[1], ref_divisions)
     archive_X: List[Config] = [tuple(r) for r in P]
@@ -209,7 +284,7 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
     prev_key = None
     while evaluated < budget:
         Q = _crossover_mutate(P, sizes, rng)
-        FQ = evaluate([tuple(r) for r in Q])
+        FQ = engine([tuple(r) for r in Q])
         evaluated += len(Q)
         archive_X += [tuple(r) for r in Q]
         archive_F.append(FQ)
@@ -239,7 +314,7 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                 n_new = pop // 2
                 P[:n_new] = np.stack(
                     [rng.integers(0, s, n_new) for s in sizes], 1)
-                F[:n_new] = evaluate([tuple(r) for r in P[:n_new]])
+                F[:n_new] = engine([tuple(r) for r in P[:n_new]])
                 evaluated += n_new
                 stale = 0
         else:
@@ -247,7 +322,7 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         prev_key = key
     allF = np.concatenate(archive_F, 0)
     pc, po = pareto_front(archive_X, allF)
-    return DSEResult(pc, po, evaluated)
+    return DSEResult(pc, po, evaluated, stats=engine.stats.as_dict())
 
 
 SAMPLERS = {"random": run_random, "tpe": run_tpe,

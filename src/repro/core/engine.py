@@ -1,0 +1,474 @@
+"""Batched surrogate-evaluation engine for the DSE hot loop.
+
+ApproxPilot's value proposition (PAPER.md Sec III-C) is that the GNN
+surrogate makes evaluating millions of approximate-accelerator
+configurations cheap enough to drive NSGA-III search. The samplers in
+`repro.core.dse` only see an ``evaluate(configs) -> (n, n_obj)`` callable;
+this module provides the production implementation of that callable:
+
+``SurrogateEngine``
+    Unifies the three evaluators — GNN surrogate (`from_gnn`), AutoAX
+    random-forest baseline (`from_rforest`), synthesis oracle
+    (`from_oracle`) — behind one batched interface with
+
+    * **fixed-shape chunked inference** — batches are split into chunks of
+      ``chunk_size`` and the ragged final chunk is padded up to the next
+      power-of-two bucket, so the jit cache holds at most
+      ``log2(chunk_size) + 1`` compiled shapes no matter how ragged the
+      incoming batches are;
+    * **config-key memoization** — NSGA-II/III re-evaluations of surviving
+      parents (and the stagnation-restart re-injections) are free across
+      generations; duplicates inside a single batch are evaluated once;
+    * **Pallas kernel dispatch** — the GNN path runs its message-passing
+      layers through the fused `repro.kernels.gnn_mp` kernel when available
+      (native on TPU, ``interpret=True`` elsewhere) with a parity check at
+      construction and a transparent pure-JAX fallback;
+    * **per-call stats** — configs/sec, cache hit rate, chunk/padding
+      counts (`EngineStats`), surfaced into ``PipelineResult.metrics``.
+
+The engine also vectorizes featurization: because every config of one
+accelerator shares the graph topology, adjacency and mask are constants and
+the node-feature tensor is assembled by table lookup
+(`_ConfigFeaturizer`) instead of the per-config Python loop in
+`repro.core.dataset.features_for_configs`.
+
+See docs/paper_map.md for how this maps onto the paper, and
+benchmarks/engine_bench.py for the batched-vs-naive throughput numbers.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Config = Tuple[int, ...]
+BatchFn = Callable[[Sequence[Config]], np.ndarray]
+
+
+# --------------------------------------------------------------------------
+# stats
+# --------------------------------------------------------------------------
+
+@dataclass
+class EngineStats:
+    """Counters accumulated across `SurrogateEngine.__call__` invocations.
+
+    Attributes:
+        calls:        number of ``engine(configs)`` invocations.
+        configs:      total configs requested (including cache hits).
+        cache_hits:   configs served from the memo cache (or deduped
+                      within a batch).
+        evaluated:    unique configs actually sent to the backend.
+        padded:       wasted rows added to reach a fixed-shape bucket.
+        chunks:       backend batch calls issued.
+        eval_time_s:  time inside the backend batch function.
+        wall_time_s:  end-to-end time inside the engine (incl. cache
+                      assembly).
+    """
+    calls: int = 0
+    configs: int = 0
+    cache_hits: int = 0
+    evaluated: int = 0
+    padded: int = 0
+    chunks: int = 0
+    eval_time_s: float = 0.0
+    wall_time_s: float = 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.configs if self.configs else 0.0
+
+    @property
+    def configs_per_sec(self) -> float:
+        return self.configs / self.wall_time_s if self.wall_time_s else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"calls": self.calls, "configs": self.configs,
+                "cache_hits": self.cache_hits, "evaluated": self.evaluated,
+                "padded": self.padded, "chunks": self.chunks,
+                "eval_time_s": round(self.eval_time_s, 4),
+                "wall_time_s": round(self.wall_time_s, 4),
+                "cache_hit_rate": round(self.cache_hit_rate, 4),
+                "configs_per_sec": round(self.configs_per_sec, 1)}
+
+
+# --------------------------------------------------------------------------
+# vectorized featurization (GNN / RF paths)
+# --------------------------------------------------------------------------
+
+class _ConfigFeaturizer:
+    """Config -> normalized node-feature tensor, by table lookup.
+
+    All configs of one accelerator share graph topology, so the normalized
+    adjacency and mask are per-engine constants; only the first 8 feature
+    dims of the arithmetic-unit rows (area, power, latency, mae, mre, mse,
+    wce, approx level) depend on the chosen library entry. We precompute a
+    normalized row table per unit kind and assemble a batch with fancy
+    indexing — O(batch) numpy ops instead of a per-config Python loop.
+
+    Produces tensors bit-identical to
+    `repro.core.dataset.features_for_configs` (asserted in
+    tests/test_engine.py).
+    """
+
+    def __init__(self, ds, app, entries: Dict[str, Sequence]):
+        from repro.core import graph as graph_lib
+
+        g = ds.graph
+        self.n_pad = ds.x.shape[1]
+        self.sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+        # base tensor: any valid choice, then unit rows get overwritten
+        choice0 = {n.id: entries[n.kind][0] for n in app.unit_nodes}
+        xf0 = graph_lib.node_features(g, app, choice0, crit_nodes=None)
+        A, X0, M = graph_lib.pad_batch([g.adj], [xf0], self.n_pad)
+        self.adj = A[0]                                    # (N, N) normalized
+        self.mask = M[0]                                   # (N,)
+        self.base = ((X0[0] - ds.x_mean) / ds.x_std
+                     * M[0][..., None]).astype(np.float32)  # (N, F)
+        # per-unit-node graph index + normalized entry table
+        self.gidx: List[int] = []
+        self.tables: List[np.ndarray] = []
+        kind_tables: Dict[str, np.ndarray] = {}
+        mu8, sd8 = ds.x_mean[:8], ds.x_std[:8]
+        for node in app.unit_nodes:
+            self.gidx.append(g.node_ids.index(node.id))
+            if node.kind not in kind_tables:
+                raw = np.asarray(
+                    [[e.area, e.power, e.latency, e.mae, e.mre, e.mse,
+                      e.wce, float(e.inst.level)]
+                     for e in entries[node.kind]], np.float32)
+                kind_tables[node.kind] = ((raw - mu8) / sd8).astype(
+                    np.float32)
+            self.tables.append(kind_tables[node.kind])
+
+    def __call__(self, configs: Sequence[Config]) -> np.ndarray:
+        C = np.asarray(configs, np.int64)                  # (B, n_units)
+        B = C.shape[0]
+        X = np.broadcast_to(self.base, (B,) + self.base.shape).copy()
+        for j, gj in enumerate(self.gidx):
+            X[:, gj, :8] = self.tables[j][C[:, j]]
+        return X
+
+
+# --------------------------------------------------------------------------
+# GNN predict functions (pure-JAX and Pallas-kernel paths)
+# --------------------------------------------------------------------------
+
+def _make_jax_predict(two_cfg, params, adj_row: np.ndarray,
+                      mask_row: np.ndarray):
+    """jit'd X -> normalized (B, 4) targets via `models.predict`."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import models
+
+    A = jnp.asarray(adj_row)
+    m = jnp.asarray(mask_row)
+
+    @jax.jit
+    def f(X):
+        B = X.shape[0]
+        adj = jnp.broadcast_to(A, (B,) + A.shape)
+        mask = jnp.broadcast_to(m, (B,) + m.shape)
+        return models.predict(two_cfg, params, adj, X, mask)[0]
+
+    return f
+
+
+def _make_kernel_predict(two_cfg, params, adj_row: np.ndarray,
+                         mask_row: np.ndarray, graph_block: int = 8):
+    """jit'd X -> normalized (B, 4), message passing via Pallas `gnn_mp`.
+
+    Supports the gcn and gsae architectures, whose layer update is exactly
+    the kernel's fused ``relu(A' @ (H @ Wn) + H @ Ws + b)`` with
+    ``A' = adj`` (gcn) or ``A' = adj / deg`` (GraphSAGE-mean: row-scaling
+    the adjacency commutes with the matmul). Readout and the two-stage
+    critical-path bit injection replicate `gnn.apply` / `models.predict`.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.graph import CRIT_IDX
+    from repro.kernels import ops
+
+    def scaled_adj(cfg):
+        a = np.asarray(adj_row, np.float32)
+        if cfg.arch == "gsae":
+            deg = np.maximum(a.sum(-1, keepdims=True), 1e-6)
+            a = a / deg
+        return jnp.asarray(a)
+
+    def stack(cfg, p, adj_k, x, mask):
+        h = x * mask[..., None]
+        for lp in p["layers"]:
+            h = ops.gnn_mp(adj_k, h, lp["w_self"], lp["w_nbr"], lp["b"],
+                           graph_block=graph_block)
+            h = h * mask[..., None]
+        return h
+
+    def readout(cfg, p, h, mask):
+        if cfg.node_level:
+            out = jax.nn.relu(h @ p["ro_w1"] + p["ro_b1"])
+            return out @ p["ro_w2"] + p["ro_b2"]
+        denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        mean = (h * mask[..., None]).sum(1) / denom
+        mx = jnp.where(mask[..., None] > 0, h, -1e30).max(1)
+        g = jnp.concatenate([mean, mx], -1)
+        g = jax.nn.relu(g @ p["ro_w1"] + p["ro_b1"])
+        return g @ p["ro_w2"] + p["ro_b2"]
+
+    s1, s2 = two_cfg.stage1, two_cfg.stage2
+    if s1.arch not in ("gcn", "gsae"):
+        raise ValueError(f"kernel path supports gcn/gsae, not {s1.arch}")
+    A1 = scaled_adj(s1)
+    m_row = jnp.asarray(mask_row)
+
+    @jax.jit
+    def f(X):
+        B = X.shape[0]
+        adj_k = jnp.broadcast_to(A1, (B,) + A1.shape)
+        mask = jnp.broadcast_to(m_row, (B,) + m_row.shape)
+        h1 = stack(s1, params.stage1, adj_k, X, mask)
+        crit_logits = readout(s1, params.stage1, h1, mask)[..., 0]
+        if two_cfg.use_critical_path:
+            bit = (jax.nn.sigmoid(crit_logits) > 0.5).astype(X.dtype)
+        else:
+            bit = jnp.zeros_like(crit_logits)
+        x2 = X.at[..., CRIT_IDX].set(bit * mask)
+        h2 = stack(s2, params.stage2, adj_k, x2, mask)
+        return readout(s2, params.stage2, h2, mask)
+
+    return f
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+
+class SurrogateEngine:
+    """Batched, memoized evaluator: ``engine(configs) -> (n, n_obj)``.
+
+    Drop-in `repro.core.dse.EvalFn`: samplers call it exactly like a plain
+    function. Construct via `from_gnn` / `from_rforest` / `from_oracle`
+    for the three ApproxPilot evaluators, or wrap any batch callable
+    directly (used by `repro.core.lm_bridge` and the DSE samplers'
+    `dse.as_engine`).
+
+    Args:
+        batch_fn:    ``configs -> (len(configs), n_obj)`` backend.
+        backend:     label for stats/reporting ("jax", "pallas", ...).
+        chunk_size:  maximum configs per backend call.
+        fixed_shape: pad ragged final chunks up to a power-of-two bucket so
+                     jit-compiled backends see a bounded set of shapes.
+                     Leave False for shape-insensitive backends (oracle,
+                     numpy random forest).
+        cache:       memoize results by config key across calls. Assumes a
+                     deterministic backend (true for all evaluators here);
+                     disable for stochastic evaluators.
+        max_cache:   cache entry bound; oldest entries evicted beyond it.
+    """
+
+    def __init__(self, batch_fn: BatchFn, *, backend: str = "generic",
+                 chunk_size: int = 512, fixed_shape: bool = False,
+                 cache: bool = True, max_cache: int = 1_000_000):
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        self._batch_fn = batch_fn
+        self.backend = backend
+        self.chunk_size = int(chunk_size)
+        self.fixed_shape = fixed_shape
+        self.cache_enabled = cache
+        self.max_cache = max_cache
+        self._cache: Dict[Config, np.ndarray] = {}
+        self.stats = EngineStats()
+
+    # -- public API --------------------------------------------------------
+
+    def __call__(self, configs: Sequence[Config]) -> np.ndarray:
+        """Evaluate a batch of configs; rows align with the input order."""
+        t_wall = time.perf_counter()
+        keys = [tuple(int(v) for v in c) for c in configs]
+        self.stats.calls += 1
+        self.stats.configs += len(keys)
+        miss: List[Config] = []
+        seen = set()
+        for k in keys:
+            if k not in self._cache and k not in seen:
+                seen.add(k)
+                miss.append(k)
+        self.stats.cache_hits += len(keys) - len(miss)
+        if miss:
+            t0 = time.perf_counter()
+            rows = self._eval_chunked(miss)
+            self.stats.eval_time_s += time.perf_counter() - t0
+            self.stats.evaluated += len(miss)
+            for k, r in zip(miss, rows):
+                self._cache[k] = r
+        out = np.stack([self._cache[k] for k in keys], 0).astype(np.float64)
+        if not self.cache_enabled:
+            self._cache.clear()
+        elif len(self._cache) > self.max_cache:
+            drop = len(self._cache) - self.max_cache
+            for k in list(itertools.islice(self._cache, drop)):
+                del self._cache[k]
+        self.stats.wall_time_s += time.perf_counter() - t_wall
+        return out
+
+    def reset_stats(self) -> None:
+        """Zero the counters (cache contents are kept)."""
+        self.stats = EngineStats()
+
+    def clear_cache(self) -> None:
+        """Drop all memoized results."""
+        self._cache.clear()
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    # -- chunking ----------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        """Smallest power-of-two >= n, capped at chunk_size."""
+        b = 1
+        while b < n:
+            b <<= 1
+        return min(b, self.chunk_size)
+
+    def _eval_chunked(self, configs: List[Config]) -> np.ndarray:
+        rows = []
+        i, n = 0, len(configs)
+        while i < n:
+            take = min(self.chunk_size, n - i)
+            chunk = configs[i:i + take]
+            if self.fixed_shape and take < self.chunk_size:
+                b = self._bucket(take)
+                self.stats.padded += b - take
+                chunk = chunk + [chunk[-1]] * (b - take)
+            y = np.asarray(self._batch_fn(chunk))
+            if y.shape[0] != len(chunk):
+                raise ValueError(
+                    f"backend returned {y.shape[0]} rows for "
+                    f"{len(chunk)} configs")
+            rows.append(y[:take])
+            self.stats.chunks += 1
+            i += take
+        return np.concatenate(rows, 0)
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_gnn(cls, two_cfg, params, ds, app,
+                 entries: Dict[str, Sequence], *, chunk_size: int = 512,
+                 use_kernel: str = "auto", cache: bool = True,
+                 parity_atol: float = 2e-3) -> "SurrogateEngine":
+        """GNN-surrogate engine (the ApproxPilot fast path).
+
+        Featurizes by table lookup, runs the two-stage model under jit with
+        bucketed batch shapes, denormalizes and flips ssim to the
+        minimized ``1 - ssim`` objective.
+
+        ``use_kernel``: "auto" dispatches to the Pallas `gnn_mp` kernel on
+        TPU for the gcn/gsae architectures, transparently falling back to
+        pure JAX when the kernel fails to build or fails the probe-batch
+        parity check; "on" *forces* the kernel path (interpret-mode
+        off-TPU — correct but slow, used by tests) and raises on an
+        unsupported arch, a build error, or a parity mismatch; "off"
+        forces pure JAX.
+        """
+        from repro.kernels import ops as kernel_ops
+
+        feat = _ConfigFeaturizer(ds, app, entries)
+        jax_predict = _make_jax_predict(two_cfg, params, feat.adj, feat.mask)
+        predict, backend = jax_predict, "jax"
+        want_kernel = (use_kernel == "on"
+                       or (use_kernel == "auto" and kernel_ops.ON_TPU))
+        if use_kernel == "on" and two_cfg.gnn.arch not in ("gcn", "gsae"):
+            raise ValueError(
+                f"use_kernel='on' but the gnn_mp kernel does not support "
+                f"arch={two_cfg.gnn.arch!r} (only gcn/gsae)")
+        if want_kernel and two_cfg.gnn.arch in ("gcn", "gsae"):
+            try:
+                kp = _make_kernel_predict(two_cfg, params, feat.adj,
+                                          feat.mask)
+                probe = _probe_configs(feat.sizes)
+                import jax.numpy as jnp
+                Xp = jnp.asarray(feat(probe))
+                parity_ok = np.allclose(np.asarray(kp(Xp)),
+                                        np.asarray(jax_predict(Xp)),
+                                        atol=parity_atol)
+            except Exception:
+                if use_kernel == "on":
+                    raise
+                parity_ok = False   # auto: fall back to pure JAX
+            if parity_ok:
+                predict, backend = kp, "pallas"
+            elif use_kernel == "on":
+                raise RuntimeError(
+                    "use_kernel='on' but the gnn_mp kernel path failed the "
+                    f"parity check against pure JAX (atol={parity_atol})")
+
+        import jax.numpy as jnp
+
+        def batch_fn(configs):
+            y = np.asarray(predict(jnp.asarray(feat(configs))))
+            y = ds.denorm_y(y)
+            y[:, 3] = 1 - y[:, 3]           # ssim -> 1-ssim (minimize)
+            return y
+
+        return cls(batch_fn, backend=backend, chunk_size=chunk_size,
+                   fixed_shape=True, cache=cache)
+
+    @classmethod
+    def from_rforest(cls, rf_models: Dict[int, "object"], ds, app,
+                     entries: Dict[str, Sequence], *,
+                     chunk_size: int = 4096,
+                     cache: bool = True) -> "SurrogateEngine":
+        """Random-forest engine (the AutoAX baseline).
+
+        Uses the same vectorized featurizer, then the per-target forests on
+        the flat (masked, normalized) feature vectors — matching
+        `AccelDataset.flat_features` exactly, where the previous inline
+        evaluator fed un-masked padding rows at DSE time.
+        """
+        feat = _ConfigFeaturizer(ds, app, entries)
+
+        def batch_fn(configs):
+            X = feat(configs)[:, :, :8].reshape(len(configs), -1)
+            preds = np.stack(
+                [rf_models[i].predict(X) * ds.y_std[i] + ds.y_mean[i]
+                 for i in range(4)], 1)
+            preds[:, 3] = 1 - preds[:, 3]
+            return preds
+
+        return cls(batch_fn, backend="rforest", chunk_size=chunk_size,
+                   fixed_shape=False, cache=cache)
+
+    @classmethod
+    def from_oracle(cls, app, entries: Dict[str, Sequence], inp, exact_out,
+                    *, cache: bool = True) -> "SurrogateEngine":
+        """Synthesis-oracle engine (ground truth; per-config, so the main
+        win here is memoization of repeat evaluations)."""
+        from repro.accel import apps as apps_lib
+        from repro.accel import synth
+
+        def batch_fn(configs):
+            out = []
+            for c in configs:
+                choice = {node.id: entries[node.kind][i]
+                          for node, i in zip(app.unit_nodes, c)}
+                rep = synth.synthesize(app, choice)
+                acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
+                out.append([rep["area"], rep["power"], rep["latency"],
+                            1 - acc])
+            return np.asarray(out, np.float64)
+
+        return cls(batch_fn, backend="oracle", chunk_size=1 << 30,
+                   fixed_shape=False, cache=cache)
+
+
+def _probe_configs(sizes: Sequence[int], n: int = 4) -> List[Config]:
+    """Small deterministic config set for the kernel parity check."""
+    rng = np.random.default_rng(0)
+    return [tuple(int(rng.integers(0, s)) for s in sizes) for _ in range(n)]

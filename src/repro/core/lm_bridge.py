@@ -165,26 +165,40 @@ def train_surrogate(cfg: ArchConfig, shape: ShapeConfig, n_samples: int = 400,
                                     training.TrainConfig(epochs=epochs))
     metrics = training.evaluate(two, params, ds, te)
 
-    def predict(choices):
+    jit_predict = jax.jit(lambda a, x, m: models.predict(
+        two, params, a, x, m)[0])
+
+    def _predict_batch(choices):
         Xq = np.stack([feats(c) for c in choices])
         Aq = np.broadcast_to(A1, (len(Xq), n_ops, n_ops)).copy()
         Mq = np.ones((len(Xq), n_ops), np.float32)
-        y, _ = models.predict(two, params, jnp.asarray(Aq),
-                              jnp.asarray(Xq), jnp.asarray(Mq))
+        y = jit_predict(jnp.asarray(Aq), jnp.asarray(Xq), jnp.asarray(Mq))
         return ds.denorm_y(np.asarray(y))
 
+    # chunked + memoized like the accelerator surrogates; fixed-shape
+    # buckets keep the jit cache bounded across ragged DSE batches
+    from repro.core.engine import SurrogateEngine
+    predict = SurrogateEngine(_predict_batch, backend="gnn-lm",
+                              chunk_size=256, fixed_shape=True)
     return metrics, predict
 
 
 def run_dse(cfg: ArchConfig, shape: ShapeConfig, budget: int = 1500,
             seed: int = 0, max_penalty: float = 6.0):
     """NSGA-III over per-op precisions; returns the Pareto front filtered by
-    the quality constraint, plus the bf16 baseline for comparison."""
+    the quality constraint, plus the bf16 baseline for comparison.
+
+    The roofline oracle is served through a caching `SurrogateEngine`, so
+    NSGA's parent re-evaluations are free; engine throughput counters are
+    returned under the ``"engine"`` key.
+    """
     from repro.core import dse
+    from repro.core.engine import SurrogateEngine
     ops, _adj = op_graph(cfg, shape)
     evaluate, evaluate_one = oracle(cfg, shape, ops)
+    engine = SurrogateEngine(evaluate, backend="roofline-oracle")
     sizes = [len(PRECISIONS)] * len(ops)
-    res = dse.run_nsga(sizes, evaluate, budget, seed=seed, pop=48)
+    res = dse.run_nsga(sizes, engine, budget, seed=seed, pop=48)
     base, crit = evaluate_one([0] * len(ops))
     feasible = [(c, o) for c, o in zip(res.pareto_configs, res.pareto_objs)
                 if o[2] <= max_penalty]
@@ -193,4 +207,5 @@ def run_dse(cfg: ArchConfig, shape: ShapeConfig, budget: int = 1500,
             "baseline": {"time": base[0], "hbm_gb": base[1],
                          "critical_op": ops[crit]["name"]},
             "pareto": feasible,
-            "best": feasible[0] if feasible else None}
+            "best": feasible[0] if feasible else None,
+            "engine": engine.stats.as_dict()}

@@ -7,6 +7,11 @@
 `surrogate="rf"` swaps in the AutoAX random-forest baseline on the same
 pruned space — both frameworks are first-class so every paper table has a
 benchmark entry.
+
+All three surrogates are served to the DSE loop through
+`repro.core.engine.SurrogateEngine` (batched chunked inference, config
+memoization, optional Pallas kernel dispatch); its throughput counters are
+surfaced as ``PipelineResult.metrics["engine"]``.
 """
 from __future__ import annotations
 
@@ -14,7 +19,6 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,6 +27,7 @@ from repro.accel import library as lib
 from repro.accel import synth
 from repro.core import dataset as ds_lib
 from repro.core import dse, gnn, models, pruning, training
+from repro.core.engine import SurrogateEngine
 from repro.core.rforest import RandomForest
 from repro.data import images as images_lib
 
@@ -44,6 +49,8 @@ class PipelineConfig:
     seed: int = 0
     use_critical_path: bool = True
     surrogate: str = "gnn"          # gnn | rf | oracle
+    eval_chunk: int = 512           # engine chunk size for the DSE loop
+    use_kernel: str = "auto"        # Pallas gnn_mp: auto | on | off
 
     @staticmethod
     def paper_faithful(app: str) -> "PipelineConfig":
@@ -57,12 +64,12 @@ class PipelineResult:
     cfg: PipelineConfig
     pruned_sizes: Dict[str, Dict]
     space: Dict[str, float]
-    metrics: Dict[str, Dict]
+    metrics: Dict[str, Dict]     # per-target quality + "engine" throughput
     pareto_configs: List[Tuple[int, ...]]
     pareto_objs: np.ndarray
     timings: Dict[str, float]
     dataset: object
-    predictor: Callable
+    predictor: Callable          # the SurrogateEngine used for DSE
 
 
 def _oracle_eval(app, entries, inp, exact_out):
@@ -132,48 +139,27 @@ def run(cfg: PipelineConfig, verbose: bool = False) -> PipelineResult:
                         inp)
 
     if cfg.surrogate == "oracle":
-        evaluate = _oracle_eval(app, entries, inp, exact_out)
-        predictor = evaluate
+        engine = SurrogateEngine.from_oracle(app, entries, inp, exact_out)
     elif cfg.surrogate == "rf":
-        def evaluate(configs):
-            rows = []
-            for c in configs:
-                choice = {node.id: entries[node.kind][i]
-                          for node, i in zip(app.unit_nodes, c)}
-                xf = np.zeros((ds.x.shape[1], 8), np.float32)
-                from repro.core.graph import node_features
-                f = node_features(ds.graph, app, choice)[:, :8]
-                xf[:len(f)] = f
-                rows.append(((xf - ds.x_mean[:8]) / ds.x_std[:8]).reshape(-1))
-            X = np.asarray(rows, np.float32)
-            preds = np.stack([rf_models[i].predict(X) * ds.y_std[i]
-                              + ds.y_mean[i] for i in range(4)], 1)
-            preds[:, 3] = 1 - preds[:, 3]
-            return preds
-        predictor = evaluate
+        engine = SurrogateEngine.from_rforest(rf_models, ds, app, entries)
     else:
-        jit_predict = jax.jit(lambda a, x, m: models.predict(
-            two_cfg, params, a, x, m)[0])
-
-        def evaluate(configs):
-            A, X, M = ds_lib.features_for_configs(ds, app, entries, configs)
-            y = np.asarray(jit_predict(jnp.asarray(A), jnp.asarray(X),
-                                       jnp.asarray(M)))
-            y = ds.denorm_y(y)
-            y[:, 3] = 1 - y[:, 3]       # ssim -> 1-ssim (minimize)
-            return y
-        predictor = evaluate
+        engine = SurrogateEngine.from_gnn(two_cfg, params, ds, app, entries,
+                                          chunk_size=cfg.eval_chunk,
+                                          use_kernel=cfg.use_kernel)
 
     t0 = time.time()
     sizes = [len(entries[n.kind]) for n in app.unit_nodes]
     sampler = dse.SAMPLERS[cfg.sampler]
-    res = sampler(sizes, evaluate, cfg.dse_budget, seed=cfg.seed,
+    res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
                   pop=cfg.dse_pop) if cfg.sampler.startswith("nsga") else \
-        sampler(sizes, evaluate, cfg.dse_budget, seed=cfg.seed)
+        sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed)
     t["dse"] = time.time() - t0
+    metrics = dict(metrics)
+    metrics["engine"] = {"backend": engine.backend,
+                         **engine.stats.as_dict()}
 
     return PipelineResult(cfg, report, space, metrics, res.pareto_configs,
-                          res.pareto_objs, t, ds, predictor)
+                          res.pareto_objs, t, ds, engine)
 
 
 def validate_pareto(result: PipelineResult, k: int = 10) -> Dict[str, float]:
