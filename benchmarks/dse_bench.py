@@ -1,0 +1,184 @@
+"""Search-layer benchmark: island-model vs single-population DSE.
+
+PR 1 made surrogate evaluation batched and memoized; this benchmark
+measures the *sampler* layer that sits on top:
+
+  * vectorized Pareto kernels — `non_dominated_sort` / `_niche_select`
+    speedup over the reference Python-loop implementations;
+  * islands vs serial — merged-front hypervolume and wall-clock of
+    `repro.core.islands.run_islands` against single-population `nsga3`
+    at equal evaluation budget, on the Sobel design space under the
+    critical-path-faithful `library_proxy_evaluator` (the evaluator is
+    ~free, so wall-clock is dominated by the search itself).
+
+    PYTHONPATH=src python benchmarks/dse_bench.py [--smoke]
+        [--budget 2048] [--seeds 0,1,2] [--out BENCH_dse.json]
+
+Writes a JSON report (default BENCH_dse.json in the repo root) and prints
+CSV-ish rows like benchmarks/run.py. `--smoke` is the CI mode: a tiny
+islands run (pop=8, budget=64) that exercises the whole orchestrator
+(migration included) in seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def pareto_kernel_bench(n: int = 512, n_obj: int = 4, reps: int = 3):
+    """Vectorized-vs-reference timings for the Pareto hot path."""
+    from repro.core import dse
+
+    rng = np.random.default_rng(0)
+    F = rng.random((n, n_obj))
+    refs = dse.das_dennis(n_obj, 6)
+
+    def best(fn):
+        out, t = None, float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            t = min(t, time.perf_counter() - t0)
+        return out, t
+
+    fv, t_vec = best(lambda: dse.non_dominated_sort(F))
+    fr, t_ref = best(lambda: dse.non_dominated_sort_ref(F))
+    assert all(np.array_equal(a, b) for a, b in zip(fv, fr))
+    front = F[fv[0]]
+    need = max(1, len(front) // 2)
+    _, t_nvec = best(lambda: dse._niche_select(
+        front, need, refs, np.random.default_rng(0)))
+    _, t_nref = best(lambda: dse._niche_select_ref(
+        front, need, refs, np.random.default_rng(0)))
+    out = {"n": n, "n_obj": n_obj,
+           "nds_ref_ms": round(t_ref * 1e3, 2),
+           "nds_vec_ms": round(t_vec * 1e3, 2),
+           "nds_speedup": round(t_ref / t_vec, 1),
+           "niche_ref_ms": round(t_nref * 1e3, 2),
+           "niche_vec_ms": round(t_nvec * 1e3, 2),
+           "niche_speedup": round(t_nref / t_nvec, 1)}
+    print(f"dse_bench,pareto_kernels,n={n},nds_speedup={out['nds_speedup']}x,"
+          f"niche_speedup={out['niche_speedup']}x")
+    return out
+
+
+def _setup(app_name: str):
+    from repro.accel import apps as apps_lib
+    from repro.core import pruning
+    from repro.core.islands import library_proxy_evaluator
+
+    app = apps_lib.APPS[app_name]
+    pruned, _ = pruning.prune_library()
+    entries = {k: pruned[k] for k in {n.kind for n in app.unit_nodes}}
+    sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+    return sizes, library_proxy_evaluator(app, entries)
+
+
+def islands_vs_serial(app_name: str, budget: int, seeds, serial_pop: int,
+                      pop: int, n_islands: int, epochs: int, migrate_k: int):
+    """One row per (seed, fleet): hv + wall-clock vs serial nsga3."""
+    from repro.core import dse
+    from repro.core.islands import run_islands
+
+    sizes, evaluate = _setup(app_name)
+    fleets = {"nsga3-cones": ("nsga3",) * n_islands,
+              "mixed": None}          # None -> DEFAULT_SAMPLERS
+    rows = []
+    for seed in seeds:
+        t0 = time.perf_counter()
+        serial = dse.run_nsga(sizes, evaluate, budget, seed=seed,
+                              pop=serial_pop)
+        t_serial = time.perf_counter() - t0
+        for fleet, mix in fleets.items():
+            t0 = time.perf_counter()
+            isl = run_islands(sizes, evaluate, budget, seed=seed,
+                              n_islands=n_islands, samplers=mix, pop=pop,
+                              epochs=epochs, migrate_k=migrate_k)
+            t_isl = time.perf_counter() - t0
+            ref = dse.hv_reference(np.concatenate(
+                [serial.pareto_objs, isl.pareto_objs], 0))
+            hv_s = dse.hypervolume(serial.pareto_objs, ref,
+                                   n_samples=16384)
+            hv_i = dse.hypervolume(isl.pareto_objs, ref, n_samples=16384)
+            row = {"seed": seed, "fleet": fleet, "budget": budget,
+                   "serial": {"evaluated": serial.evaluated,
+                              "front": len(serial.pareto_configs),
+                              "hv": round(hv_s, 1),
+                              "time_s": round(t_serial, 3)},
+                   "islands": {"evaluated": isl.evaluated,
+                               "front": len(isl.pareto_configs),
+                               "hv": round(hv_i, 1),
+                               "time_s": round(t_isl, 3)},
+                   "hv_ratio": round(hv_i / hv_s, 4)}
+            rows.append(row)
+            print(f"dse_bench,islands,seed={seed},fleet={fleet},"
+                  f"hv_serial={hv_s:.4g},hv_islands={hv_i:.4g},"
+                  f"ratio={row['hv_ratio']},"
+                  f"time_serial={t_serial:.2f}s,time_islands={t_isl:.2f}s")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny islands run for CI (pop=8, budget=64)")
+    ap.add_argument("--app", default="sobel")
+    ap.add_argument("--budget", type=int, default=2048)
+    ap.add_argument("--seeds", default="0,1,2")
+    ap.add_argument("--serial-pop", type=int, default=32)
+    ap.add_argument("--pop", type=int, default=8,
+                    help="per-island population")
+    ap.add_argument("--islands", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--migrate-k", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_dse.json")
+    args = ap.parse_args()
+
+    report = {"mode": "smoke" if args.smoke else "full", "app": args.app,
+              "pareto_kernels": pareto_kernel_bench(
+                  n=128 if args.smoke else 512)}
+
+    if args.smoke:
+        # satellite CI gate: the islands sampler end-to-end on a tiny
+        # budget — orchestration, migration, history, determinism
+        from repro.core.islands import run_islands
+
+        sizes, evaluate = _setup(args.app)
+        t0 = time.perf_counter()
+        res = run_islands(sizes, evaluate, 64, seed=0, n_islands=4, pop=8,
+                          epochs=2, migrate_k=2)
+        dt = time.perf_counter() - t0
+        assert res.pareto_configs, "smoke islands produced an empty front"
+        assert res.history, "smoke islands produced no history"
+        report["smoke_islands"] = {
+            "budget": 64, "pop": 8, "evaluated": res.evaluated,
+            "front": len(res.pareto_configs),
+            "epochs": len(res.history), "time_s": round(dt, 3)}
+        print(f"dse_bench,smoke,evaluated={res.evaluated},"
+              f"front={len(res.pareto_configs)},time_s={dt:.2f}")
+    else:
+        seeds = [int(s) for s in args.seeds.split(",") if s]
+        rows = islands_vs_serial(args.app, args.budget, seeds,
+                                 args.serial_pop, args.pop, args.islands,
+                                 args.epochs, args.migrate_k)
+        report["islands_vs_serial"] = rows
+        by_fleet = {}
+        for r in rows:
+            by_fleet.setdefault(r["fleet"], []).append(r["hv_ratio"])
+        report["mean_hv_ratio"] = {f: round(float(np.mean(v)), 4)
+                                   for f, v in by_fleet.items()}
+        report["best_hv_ratio"] = {f: round(float(np.max(v)), 4)
+                                   for f, v in by_fleet.items()}
+        print(f"dse_bench,summary,mean_hv_ratio={report['mean_hv_ratio']}")
+
+    out = Path(args.out)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"dse_bench,report,{out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -161,7 +161,7 @@ def fig6_sampling_methods(app="sobel", budget=1000):
         engine([tuple(int(rng.integers(0, s)) for s in sizes)
                 for _ in range(b)])
         b <<= 1
-    for name in ("random", "tpe", "nsga2", "nsga3"):
+    for name in ("random", "tpe", "nsga2", "nsga3", "islands"):
         engine.clear_cache()        # per-sampler timing fairness
         engine.reset_stats()
         t0 = time.time()

@@ -15,7 +15,7 @@ from repro.core import pipeline as P
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="sobel",
-                    choices=["sobel", "gaussian", "kmeans"])
+                    choices=["sobel", "gaussian", "kmeans", "dct8", "fir15"])
     ap.add_argument("--paper", action="store_true",
                     help="paper-faithful scale (slow: 55k-105k samples)")
     args = ap.parse_args()
@@ -30,9 +30,17 @@ def main():
     print(f"  {res.space}")
     print("\n-- surrogate quality (Table V analog) --")
     for k, v in res.metrics.items():
-        if k == "engine":
+        if k in ("engine", "dse_history"):
             continue
         print(f"  {k}: " + ", ".join(f"{m}={x:.3f}" for m, x in v.items()))
+    hist = res.metrics.get("dse_history", [])
+    if hist:
+        h0, h1 = hist[0], hist[-1]
+        print("\n-- DSE convergence (metrics['dse_history']) --")
+        print(f"  front {h0['front_size']} -> {h1['front_size']}, "
+              f"hypervolume {h0['hypervolume']:.3g} -> "
+              f"{h1['hypervolume']:.3g} over {len(hist)} recorded "
+              f"generations")
     eng = res.metrics.get("engine", {})
     if eng:
         print("\n-- DSE evaluation engine --")

@@ -1,11 +1,14 @@
-"""Benchmark accelerators: Sobel edge detector, Gaussian filter, K-means.
+"""Benchmark accelerators: Sobel, Gaussian, K-means, DCT-8, FIR-15.
 
 Each accelerator is (a) a dataflow graph over *physical* arithmetic-unit
-instances (Table II counts exactly: Sobel 2xadd8+2xadd12+1xsub10, Gaussian
-8xadd16+9xmul8x4, Kmeans 2xadd16+6xsub10+6xmul8+2xsqrt18) plus fixed
-components (memories, abs, comparators, dividers), and (b) a vectorized
-functional model: the same physical unit is REUSED for every operation
-mapped onto it, exactly like the streamed RTL the paper synthesizes.
+instances (Table-II-style counts: Sobel 2xadd8+2xadd12+1xsub10, Gaussian
+8xadd16+9xmul8x4, Kmeans 2xadd16+6xsub10+6xmul8+2xsqrt18, DCT-8
+4xadd8+4xsub10+4xmul8x4+3xadd16, FIR-15 7xadd8+8xmul8x4+4xadd16) plus
+fixed components (memories, abs, comparators, dividers), and (b) a
+vectorized functional model: the same physical unit is REUSED for every
+operation mapped onto it, exactly like the streamed RTL the paper
+synthesizes (the DCT butterfly runs both the row and the column pass of
+the 2D transform; the FIR adder tree folds 7 additions onto 4 adders).
 
 Accuracy = mean SSIM between approximate and exact outputs on the image set.
 """
@@ -193,8 +196,136 @@ KMEANS = AccelDef(
     run=_kmeans_run,
 )
 
+# --------------------------------------------------------------------------
+# DCT-8 (2D 8x8 block transform, even/odd butterfly decomposition)
+# --------------------------------------------------------------------------
+
+# C[u,k] = alpha(u) cos((2k+1) u pi / 16), alpha(0)=sqrt(1/8) else 1/2,
+# quantized to 4-bit magnitudes (scale 29 -> |c| <= 15). Symmetry
+# cos((2(7-k)+1) u pi/16) = (-1)^u cos((2k+1) u pi/16) halves the
+# multiplies: even-u rows consume the butterfly sums s_k = x_k + x_{7-k},
+# odd-u rows the differences d_k = x_k - x_{7-k}.
+_DCT_SCALE = 29
+_DCT_C = np.round(np.array(
+    [[(1.0 / np.sqrt(8) if u == 0 else 0.5)
+      * np.cos((2 * k + 1) * u * np.pi / 16) for k in range(4)]
+     for u in range(8)]) * _DCT_SCALE).astype(np.int32)
+
+
+def _signed_mul(impl: Callable, x: jax.Array, c: int) -> jax.Array:
+    """Sign-magnitude use of an unsigned multiplier: |x| * |c| through the
+    physical unit, sign reapplied by fixed logic."""
+    p = impl(jnp.abs(x), jnp.full_like(x, abs(int(c))))
+    return jnp.where((x < 0) ^ (c < 0), -p, p)
+
+
+def _dct8_1d(impls: Dict[str, Callable], v: jax.Array) -> jax.Array:
+    """1D DCT-8 along the last axis (length 8); v signed int32."""
+    s = [impls[f"b{k}"](v[..., k], v[..., 7 - k]) for k in range(4)]
+    d = [impls[f"d{k}"](v[..., k], v[..., 7 - k]) for k in range(4)]
+    outs = []
+    for u in range(8):
+        src = s if u % 2 == 0 else d
+        prods = [_signed_mul(impls[f"m{k}"], src[k], int(_DCT_C[u, k]))
+                 for k in range(4)]
+        t0 = impls["a0"](prods[0], prods[1])
+        t1 = impls["a1"](prods[2], prods[3])
+        outs.append(impls["a2"](t0, t1))
+    return jnp.stack(outs, -1)
+
+
+def _dct8_run(impls: Dict[str, Callable], images: jax.Array) -> jax.Array:
+    """images: (N,H,W) grayscale int32 -> 2D DCT coefficient blocks
+    (same physical butterfly streams the row pass, then the column pass)."""
+    N, H, W = images.shape
+    h8, w8 = (H // 8) * 8, (W // 8) * 8
+    g = images[:, :h8, :w8]
+    rows = g.reshape(N, h8, w8 // 8, 8)
+    rowed = _dct8_1d(impls, rows) >> 6              # fixed rescale shift
+    t = rowed.reshape(N, h8, w8).transpose(0, 2, 1)
+    cols = t.reshape(N, w8, h8 // 8, 8)
+    coled = _dct8_1d(impls, cols) >> 6
+    out = coled.reshape(N, w8, h8).transpose(0, 2, 1)
+    return jnp.clip(out, -255, 255)
+
+
+DCT8 = AccelDef(
+    name="dct8",
+    nodes=tuple(
+        [Node("img_mem", "mem", fixed=True),
+         Node("coeff_rom", "mem", fixed=True)]
+        + [Node(f"b{k}", "add8") for k in range(4)]
+        + [Node(f"d{k}", "sub10") for k in range(4)]
+        + [Node(f"m{k}", "mul8x4") for k in range(4)]
+        + [Node(f"a{k}", "add16") for k in range(3)]
+        + [Node("shift", "shift", fixed=True),
+           Node("out_mem", "mem", fixed=True)]),
+    edges=tuple(
+        [("img_mem", f"b{k}") for k in range(4)]
+        + [("img_mem", f"d{k}") for k in range(4)]
+        + [("coeff_rom", f"m{k}") for k in range(4)]
+        + [(f"b{k}", f"m{k}") for k in range(4)]     # even-pass operands
+        + [(f"d{k}", f"m{k}") for k in range(4)]     # odd-pass operands
+        + [("m0", "a0"), ("m1", "a0"), ("m2", "a1"), ("m3", "a1"),
+           ("a0", "a2"), ("a1", "a2"),
+           ("a2", "shift"), ("shift", "out_mem")]),
+    run=_dct8_run,
+)
+
+
+# --------------------------------------------------------------------------
+# FIR-15 (symmetric 15-tap lowpass, pre-add folding + reused adder tree)
+# --------------------------------------------------------------------------
+
+# triangular window, sum 64; pair taps k and -k share coefficient k+1,
+# center tap weight 8 — all 4-bit magnitudes for the mul8x4 port
+_FIR_W = (1, 2, 3, 4, 5, 6, 7, 8)
+
+
+def _fir15_run(impls: Dict[str, Callable], images: jax.Array) -> jax.Array:
+    """images: (N,H,W) grayscale int32 -> horizontally lowpassed (N,H,W)."""
+    g = images
+    tap = {k: jnp.roll(g, -k, axis=-1) for k in range(-7, 8)}
+    pre = [impls[f"p{k}"](tap[k - 7], tap[7 - k]) for k in range(7)]
+    prods = [impls[f"m{k}"](pre[k], jnp.full_like(g, _FIR_W[k]))
+             for k in range(7)]
+    prods.append(impls["m7"](tap[0], jnp.full_like(g, _FIR_W[7])))
+    t1 = impls["a0"](prods[0], prods[1])
+    t2 = impls["a1"](prods[2], prods[3])
+    t3 = impls["a2"](prods[4], prods[5])
+    t4 = impls["a3"](prods[6], prods[7])
+    t5 = impls["a0"](t1, t2)                        # physical adders reused
+    t6 = impls["a1"](t3, t4)
+    y = impls["a2"](t5, t6)
+    return jnp.clip(y >> 6, 0, 255)
+
+
+FIR15 = AccelDef(
+    name="fir15",
+    nodes=tuple(
+        [Node("img_mem", "mem", fixed=True),
+         Node("coeff_rom", "mem", fixed=True)]
+        + [Node(f"p{k}", "add8") for k in range(7)]
+        + [Node(f"m{k}", "mul8x4") for k in range(8)]
+        + [Node(f"a{k}", "add16") for k in range(4)]
+        + [Node("shift", "shift", fixed=True),
+           Node("out_mem", "mem", fixed=True)]),
+    edges=tuple(
+        [("img_mem", f"p{k}") for k in range(7)]
+        + [("img_mem", "m7")]                        # center tap
+        + [("coeff_rom", f"m{k}") for k in range(8)]
+        + [(f"p{k}", f"m{k}") for k in range(7)]
+        + [("m0", "a0"), ("m1", "a0"), ("m2", "a1"), ("m3", "a1"),
+           ("m4", "a2"), ("m5", "a2"), ("m6", "a3"), ("m7", "a3"),
+           ("a1", "a0"),                             # t5 = a0(t1, t2)
+           ("a2", "a1"), ("a3", "a1"),               # t6 = a1(t3, t4)
+           ("a0", "a2"), ("a1", "a2"),               # y  = a2(t5, t6)
+           ("a2", "shift"), ("shift", "out_mem")]),
+    run=_fir15_run,
+)
+
 APPS: Dict[str, AccelDef] = {"sobel": SOBEL, "gaussian": GAUSSIAN,
-                             "kmeans": KMEANS}
+                             "kmeans": KMEANS, "dct8": DCT8, "fir15": FIR15}
 
 
 # --------------------------------------------------------------------------

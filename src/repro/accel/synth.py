@@ -23,15 +23,19 @@ import numpy as np
 from repro.accel import library as lib
 from repro.accel.apps import AccelDef
 
-_FIXED_PPA = {
+FIXED_PPA = {
     "mem": {"area": 220.0, "power": 35.0, "latency": 4.0},
     "abs": {"area": 12.0, "power": 3.0, "latency": 2.5},
     "cmp": {"area": 18.0, "power": 4.0, "latency": 3.0},
     "div": {"area": 450.0, "power": 60.0, "latency": 0.0},  # off critical loop
     "shift": {"area": 2.0, "power": 0.5, "latency": 0.5},
 }
-_WIRE_DELAY_PER_FANOUT = 0.35
-_LEAKAGE_FRAC = 0.08
+WIRE_DELAY_PER_FANOUT = 0.35
+LEAKAGE_FRAC = 0.08
+# back-compat aliases (graph.py and older callers import the _ names)
+_FIXED_PPA = FIXED_PPA
+_WIRE_DELAY_PER_FANOUT = WIRE_DELAY_PER_FANOUT
+_LEAKAGE_FRAC = LEAKAGE_FRAC
 
 
 def _jitter(key: str, spread: float = 0.004) -> float:
@@ -39,14 +43,6 @@ def _jitter(key: str, spread: float = 0.004) -> float:
     # configuration-induced PPA spread or it becomes the R^2 noise floor
     h = int(hashlib.sha256(key.encode()).hexdigest()[:8], 16)
     return 1.0 + ((h % 1000) - 500) / 500.0 * spread
-
-
-def _graph(app: AccelDef) -> nx.DiGraph:
-    g = nx.DiGraph()
-    for n in app.nodes:
-        g.add_node(n.id, kind=n.kind, fixed=n.fixed)
-    g.add_edges_from(app.edges)
-    return g
 
 
 def node_ppa(app: AccelDef, choice: Dict[str, lib.LibEntry]
@@ -62,24 +58,15 @@ def node_ppa(app: AccelDef, choice: Dict[str, lib.LibEntry]
     return out
 
 
-def synthesize(app: AccelDef, choice: Dict[str, lib.LibEntry]
-               ) -> Dict[str, object]:
-    """Returns {area, power, latency, critical_nodes (set), node_delay}."""
-    g = _graph(app)
-    ppa = node_ppa(app, choice)
-    cfg_key = app.name + "|" + ",".join(
-        f"{k}:{v.inst.name}" for k, v in sorted(choice.items()))
-
-    area = sum(p["area"] for p in ppa.values()) * _jitter(cfg_key + "A")
-    dyn = sum(p["power"] for p in ppa.values())
-    power = dyn * (1 + _LEAKAGE_FRAC) * _jitter(cfg_key + "P")
-
-    # longest-path DP needs a DAG. Physical unit REUSE introduces cycles
-    # (a unit feeding itself across pipeline stages); those back-edges are
-    # registered in the RTL, so they are sequential boundaries, not
-    # combinational paths. Break them deterministically in edge order.
+def acyclic_dataflow(app: AccelDef) -> nx.DiGraph:
+    """The accelerator dataflow as a DAG. Physical unit REUSE introduces
+    cycles (a unit feeding itself across pipeline stages); those
+    back-edges are registered in the RTL, so they are sequential
+    boundaries, not combinational paths. Break them deterministically in
+    edge order. Shared by `synthesize` and the search-layer latency proxy
+    (`repro.core.islands.library_proxy_evaluator`)."""
     acyclic = nx.DiGraph()
-    acyclic.add_nodes_from(g.nodes(data=True))
+    acyclic.add_nodes_from(n.id for n in app.nodes)
     for u, v in app.edges:
         if u == v:
             continue
@@ -87,11 +74,28 @@ def synthesize(app: AccelDef, choice: Dict[str, lib.LibEntry]
         if not nx.is_directed_acyclic_graph(acyclic):
             acyclic.remove_edge(u, v)      # registered feedback edge
     assert nx.is_directed_acyclic_graph(acyclic), app.name
+    return acyclic
 
-    delay = {}
-    for nid in acyclic.nodes:
-        fan = max(acyclic.out_degree(nid), 1)
-        delay[nid] = ppa[nid]["latency"] + _WIRE_DELAY_PER_FANOUT * fan
+
+def wire_delay(g: nx.DiGraph, nid: str) -> float:
+    """Fanout-proportional wire delay added to a node's unit latency."""
+    return WIRE_DELAY_PER_FANOUT * max(g.out_degree(nid), 1)
+
+
+def synthesize(app: AccelDef, choice: Dict[str, lib.LibEntry]
+               ) -> Dict[str, object]:
+    """Returns {area, power, latency, critical_nodes (set), node_delay}."""
+    ppa = node_ppa(app, choice)
+    cfg_key = app.name + "|" + ",".join(
+        f"{k}:{v.inst.name}" for k, v in sorted(choice.items()))
+
+    area = sum(p["area"] for p in ppa.values()) * _jitter(cfg_key + "A")
+    dyn = sum(p["power"] for p in ppa.values())
+    power = dyn * (1 + LEAKAGE_FRAC) * _jitter(cfg_key + "P")
+
+    acyclic = acyclic_dataflow(app)
+    delay = {nid: ppa[nid]["latency"] + wire_delay(acyclic, nid)
+             for nid in acyclic.nodes}
 
     order = list(nx.topological_sort(acyclic))
     arrive = {nid: delay[nid] for nid in order}

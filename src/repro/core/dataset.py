@@ -29,6 +29,8 @@ SYMMETRY = {
     "gaussian": (("m0", "m2", "m6", "m8"), ("m1", "m3", "m5", "m7")),
     "sobel": (),
     "kmeans": (),
+    "dct8": (),     # butterfly lanes see distinct coefficient schedules
+    "fir15": (),    # every tap pair has a distinct coefficient
 }
 
 

@@ -13,6 +13,20 @@ gets config-key memoization — NSGA's re-evaluations of surviving parents
 and restart re-injections are free — plus chunked batching and throughput
 stats (`DSEResult.stats`). Pass a pre-built engine to share its cache
 across samplers, or a plain deterministic callable to get a private one.
+
+The Pareto hot path (`non_dominated_sort`, `_niche_select`) is fully
+broadcasted NumPy: one (n, n) domination matrix instead of the O(n^2)
+Python pair loop. The original loop implementations are kept as
+`non_dominated_sort_ref` / `_niche_select_ref` and the vectorized versions
+are parity-tested against them on randomized instances
+(tests/test_dse_parallel.py).
+
+Every sampler records a per-generation convergence trace into
+`DSEResult.history`, and all of them accept an ``init`` warm-start
+population (e.g. the Pareto front of an earlier run on the same space).
+The island-model orchestrator (`repro.core.islands.run_islands`, also
+registered as ``SAMPLERS["islands"]``) builds on this module's operators
+with persistent per-island populations and ring elite migration.
 """
 from __future__ import annotations
 
@@ -37,14 +51,21 @@ class DSEResult:
                         accounting; cache hits inside the engine still
                         count — see ``stats["evaluated"]`` for unique
                         backend evaluations).
-        history:        reserved for per-generation progress traces.
+        history:        per-generation convergence trace; one dict per
+                        generation (or per batch round / island epoch) with
+                        keys ``generation``, ``evaluated`` (cumulative
+                        requests so far), ``front_size`` (current first
+                        non-dominated front), and ``hypervolume``
+                        (dominated volume of the current front w.r.t. a
+                        reference point fixed at the first generation —
+                        comparable across generations of one run).
         stats:          `EngineStats.as_dict()` snapshot from the engine
                         that served this run.
     """
     pareto_configs: List[Config]
     pareto_objs: np.ndarray
     evaluated: int
-    history: List[int] = field(default_factory=list)
+    history: List[Dict] = field(default_factory=list)
     stats: Optional[Dict] = None
 
 
@@ -70,7 +91,40 @@ def non_dominated_sort(F: np.ndarray) -> List[np.ndarray]:
 
     Returns index arrays per front: ``fronts[0]`` is the Pareto set,
     ``fronts[k]`` dominates only fronts > k.
+
+    Vectorized: builds the full (n, n) domination matrix with one
+    broadcasted comparison, then peels fronts by decrementing domination
+    counts in bulk. Matches `non_dominated_sort_ref` exactly (parity tests
+    in tests/test_dse_parallel.py). Intended for population-scale inputs
+    (the NSGA selection loop); archive-scale callers that only need the
+    first front should use `pareto_mask` / `pareto_front`, which run
+    row-blocked in O(block * n) memory.
     """
+    F = np.asarray(F)
+    n = len(F)
+    if n == 0:
+        return []
+    less = np.all(F[:, None, :] <= F[None, :, :], axis=-1)
+    # any(F[i] < F[j]) == not all(F[j] <= F[i]), so the strict test is the
+    # transpose of `less` — one broadcast instead of two
+    D = less & ~less.T                     # D[i, j]: i dominates j
+    dom_count = D.sum(0).astype(np.int64)  # dominators remaining per point
+    fronts: List[np.ndarray] = []
+    while True:
+        current = np.where(dom_count == 0)[0]
+        if not len(current):
+            break
+        fronts.append(current)
+        # members of one front never dominate each other, so the bulk
+        # decrement only touches strictly later fronts
+        dom_count -= D[current].sum(0)
+        dom_count[current] = -1            # retire selected points
+    return fronts
+
+
+def non_dominated_sort_ref(F: np.ndarray) -> List[np.ndarray]:
+    """Reference O(n^2)-Python-loop implementation of `non_dominated_sort`
+    (the pre-vectorization code), kept for parity testing."""
     n = len(F)
     dominated_by = [[] for _ in range(n)]
     dom_count = np.zeros(n, np.int64)
@@ -109,12 +163,39 @@ def crowding_distance(F: np.ndarray) -> np.ndarray:
     return d
 
 
+def pareto_mask(F: np.ndarray) -> np.ndarray:
+    """Boolean mask of the first non-dominated front of `F`.
+
+    Sum-sorted simple cull: a dominator always has a strictly smaller
+    objective sum, so sweeping in ascending-sum order guarantees that any
+    point still unmarked when reached is on the front; each front member
+    then eliminates its dominated set with one vectorized pass. O(n)
+    memory and O(front_size * n) heavy work — cheap on run-archive-sized
+    matrices (tens of thousands of rows) where the full (n, n) domination
+    matrix of `non_dominated_sort` would not be.
+    """
+    F = np.asarray(F)
+    n = len(F)
+    if n == 0:
+        return np.zeros(0, bool)
+    order = np.argsort(F.sum(1), kind="stable")
+    Fs = F[order]
+    eff = np.ones(n, bool)
+    for i in range(n):
+        if not eff[i]:
+            continue
+        dominated = np.all(Fs >= Fs[i], axis=1) & np.any(Fs > Fs[i], axis=1)
+        eff &= ~dominated
+    out = np.empty(n, bool)
+    out[order] = eff
+    return out
+
+
 def pareto_front(configs: Sequence[Config], F: np.ndarray
                  ) -> Tuple[List[Config], np.ndarray]:
     """First non-dominated front of (configs, F), deduplicated on
     (rounded) objective rows. Returns (configs, objectives)."""
-    fronts = non_dominated_sort(F)
-    idx = fronts[0] if fronts else np.arange(0)
+    idx = np.where(pareto_mask(F))[0] if len(F) else np.arange(0)
     # dedupe identical objective rows
     seen, keep = set(), []
     for i in idx:
@@ -123,6 +204,55 @@ def pareto_front(configs: Sequence[Config], F: np.ndarray
             seen.add(key)
             keep.append(i)
     return [configs[i] for i in keep], F[keep]
+
+
+def hypervolume(F: np.ndarray, ref: np.ndarray, n_samples: int = 4096,
+                seed: int = 0) -> float:
+    """Dominated hypervolume of minimization points `F` w.r.t. `ref`.
+
+    Exact sweep for 2 objectives; deterministic Monte-Carlo estimate for
+    >= 3 (fixed-seed samples over the [min(F), ref] box, so values are
+    directly comparable across calls that share `ref`). Points beyond
+    `ref` are clipped to it, contributing only their in-box volume.
+    """
+    F = np.asarray(F, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if not len(F):
+        return 0.0
+    F = F.reshape(len(F), -1)
+    Fc = np.minimum(F, ref)
+    lo = Fc.min(0)
+    box = np.prod(ref - lo)
+    if box <= 0:
+        return 0.0
+    if F.shape[1] == 2:
+        front = Fc[pareto_mask(Fc)]
+        order = np.argsort(front[:, 0], kind="stable")
+        front = front[order]
+        hv, prev1 = 0.0, ref[1]
+        for f0, f1 in front:
+            if f1 < prev1:
+                hv += (ref[0] - f0) * (prev1 - f1)
+                prev1 = f1
+        return float(hv)
+    rng = np.random.default_rng(seed)
+    dominated = 0
+    remaining = n_samples
+    while remaining > 0:
+        take = min(remaining, 2048)
+        U = lo + rng.random((take, F.shape[1])) * (ref - lo)
+        dominated += int(np.any(np.all(Fc[None, :, :] <= U[:, None, :],
+                                       axis=-1), axis=1).sum())
+        remaining -= take
+    return float(box * dominated / n_samples)
+
+
+def hv_reference(F: np.ndarray, margin: float = 0.05) -> np.ndarray:
+    """Canonical hypervolume reference point for an objective matrix:
+    componentwise max nudged outward by `margin` (relative to magnitude,
+    with an absolute floor so the box never degenerates)."""
+    mx = np.asarray(F, np.float64).max(0)
+    return mx + np.abs(mx) * margin + 1e-3
 
 
 # --------------------------------------------------------------------------
@@ -145,9 +275,51 @@ def das_dennis(n_obj: int, divisions: int) -> np.ndarray:
     return np.asarray(pts, np.float64)
 
 
+def _perp_distances(F: np.ndarray, refs: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Normalized perpendicular distance of each point to each Das-Dennis
+    reference ray: (d (n, n_refs), nearest-ray index (n,))."""
+    ideal = F.min(0)
+    span = F.max(0) - ideal + 1e-12
+    Fn = (F - ideal) / span
+    norm = np.linalg.norm(refs, axis=1, keepdims=True)
+    cos = Fn @ refs.T / (np.linalg.norm(Fn, axis=1, keepdims=True) + 1e-12) \
+        / norm.T
+    d = np.linalg.norm(Fn, axis=1, keepdims=True) * np.sqrt(
+        np.maximum(1 - cos ** 2, 0))
+    return d, d.argmin(1)
+
+
 def _niche_select(F: np.ndarray, need: int, refs: np.ndarray,
                   rng: np.random.Generator) -> np.ndarray:
-    """NSGA-III niching on the last front."""
+    """NSGA-III niching on the last front (vectorized).
+
+    The distance/association stage is one broadcasted matrix; the greedy
+    niche-filling loop works on boolean masks and `np.argmin` instead of
+    Python set scans. Semantics match `_niche_select_ref` (parity tests in
+    tests/test_dse_parallel.py).
+    """
+    d, nearest = _perp_distances(F, refs)
+    chosen: List[int] = []
+    counts = np.zeros(len(refs), np.int64)
+    avail = np.ones(len(F), bool)
+    while len(chosen) < need and avail.any():
+        r = int(np.argmin(counts))
+        members = np.where(avail & (nearest == r))[0]
+        if not members.size:
+            counts[r] = 1 << 30
+            continue
+        pick = int(members[np.argmin(d[members, r])])
+        chosen.append(pick)
+        avail[pick] = False
+        counts[r] += 1
+    return np.asarray(chosen, np.int64)
+
+
+def _niche_select_ref(F: np.ndarray, need: int, refs: np.ndarray,
+                      rng: np.random.Generator) -> np.ndarray:
+    """Reference Python-loop implementation of `_niche_select` (the
+    pre-vectorization code), kept for parity testing."""
     ideal = F.min(0)
     span = F.max(0) - ideal + 1e-12
     Fn = (F - ideal) / span
@@ -198,8 +370,21 @@ def _crossover_mutate(parents: np.ndarray, sizes: Sequence[int],
 # samplers
 # --------------------------------------------------------------------------
 
+def _clip_init(init: Optional[Sequence[Config]], sizes: Sequence[int],
+               limit: int) -> List[Config]:
+    """Sanitize a warm-start population: clamp to the space bounds and cap
+    its size (migrants may come from a differently-pruned space)."""
+    if not init:
+        return []
+    hi = np.asarray(sizes, np.int64) - 1
+    out = [tuple(int(min(max(v, 0), h)) for v, h in zip(c, hi))
+           for c in init[:limit]]
+    return out
+
+
 def run_random(sizes: Sequence[int], evaluate: EvalFn, budget: int,
-               seed: int = 0) -> DSEResult:
+               seed: int = 0, init: Optional[Sequence[Config]] = None
+               ) -> DSEResult:
     """Uniform random search baseline (Fig. 6 'random').
 
     Args:
@@ -208,55 +393,92 @@ def run_random(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         evaluate: batch evaluator or `SurrogateEngine`; wrapped via
                   `as_engine` so duplicate draws cost nothing.
         budget:   number of configs to sample.
+        init:     warm-start configs evaluated first (count against the
+                  budget).
     """
     engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
-    configs = [tuple(rng.integers(0, s) for s in sizes)
-               for _ in range(budget)]
+    configs = _clip_init(init, sizes, budget)
+    configs += [tuple(rng.integers(0, s) for s in sizes)
+                for _ in range(budget - len(configs))]
     F = engine(configs)
     pc, po = pareto_front(configs, F)
-    return DSEResult(pc, po, budget, stats=engine.stats.as_dict())
+    history = [{"generation": 0, "evaluated": budget, "front_size": len(pc),
+                "hypervolume": hypervolume(po, hv_reference(F))}]
+    return DSEResult(pc, po, budget, history=history,
+                     stats=engine.stats.as_dict())
+
+
+def tpe_propose(X: Sequence[Config], F: np.ndarray, sizes: Sequence[int],
+                n: int, gamma: float, rng: np.random.Generator
+                ) -> List[Config]:
+    """One TPE proposal step: scalarize the observations, split good/bad
+    at the `gamma` quantile, and draw `n` configs per-dimension
+    proportional to the smoothed P(dim=v | good) / P(dim=v) ratio.
+    Shared by `run_tpe` and the island orchestrator's TPE island."""
+    scal = (F / (np.abs(F).max(0) + 1e-12)).sum(1)
+    order = np.argsort(scal, kind="stable")
+    good = order[:max(2, int(gamma * len(X)))]
+    probs = []
+    for d, s in enumerate(sizes):
+        cnt_g = np.bincount([X[i][d] for i in good], minlength=s) + 0.5
+        cnt_a = np.bincount([x[d] for x in X], minlength=s) + 0.5
+        p = (cnt_g / cnt_g.sum()) / (cnt_a / cnt_a.sum())
+        probs.append(p / p.sum())
+    return [tuple(int(rng.choice(s, p=probs[d]))
+                  for d, s in enumerate(sizes)) for _ in range(n)]
 
 
 def run_tpe(sizes: Sequence[int], evaluate: EvalFn, budget: int,
-            seed: int = 0, gamma: float = 0.25, batch: int = 64
-            ) -> DSEResult:
+            seed: int = 0, gamma: float = 0.25, batch: int = 64,
+            init: Optional[Sequence[Config]] = None) -> DSEResult:
     """Tree-structured-Parzen-lite for categorical spaces (the 'Bayesian'
     sampler of Fig. 6): models P(dim=v | good) vs P(dim=v | bad) on a
     scalarized objective and samples proportional to the ratio.
 
     Evaluation goes through `as_engine`, so repeated proposals of already
-    seen configs are served from the memo cache.
+    seen configs are served from the memo cache. `init` configs join the
+    first batch, steering the good/bad density model from generation one.
     """
     engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
-    X: List[Config] = [tuple(rng.integers(0, s) for s in sizes)
-                       for _ in range(min(batch, budget))]
+    X: List[Config] = _clip_init(init, sizes, min(batch, budget))
+    X += [tuple(rng.integers(0, s) for s in sizes)
+          for _ in range(min(batch, budget) - len(X))]
     F = engine(X)
+    history: List[Dict] = []
+    hv_ref = hv_reference(F)
+
+    def record(gen: int) -> None:
+        pc, po = pareto_front(X, F)
+        history.append({"generation": gen, "evaluated": len(X),
+                        "front_size": len(pc),
+                        "hypervolume": hypervolume(po, hv_ref)})
+
+    # cap the trace at ~25 entries: each record() scans the cumulative
+    # archive, so per-batch recording would turn large budgets superlinear
+    rounds_total = max(1, -(-(budget - len(X)) // batch))
+    stride = max(1, rounds_total // 24)
+    record(0)
+    rnd = 0
     while len(X) < budget:
-        scal = (F / (np.abs(F).max(0) + 1e-12)).sum(1)
-        order = np.argsort(scal)
-        n_good = max(2, int(gamma * len(X)))
-        good = order[:n_good]
-        probs = []
-        for d, s in enumerate(sizes):
-            cnt_g = np.bincount([X[i][d] for i in good], minlength=s) + 0.5
-            cnt_a = np.bincount([x[d] for x in X], minlength=s) + 0.5
-            p = (cnt_g / cnt_g.sum()) / (cnt_a / cnt_a.sum())
-            probs.append(p / p.sum())
-        newc = [tuple(rng.choice(s, p=probs[d])
-                      for d, s in enumerate(sizes))
-                for _ in range(min(batch, budget - len(X)))]
+        newc = tpe_propose(X, F, sizes, min(batch, budget - len(X)),
+                           gamma, rng)
         Fn = engine(newc)
         X += newc
         F = np.concatenate([F, Fn], 0)
+        rnd += 1
+        if rnd % stride == 0 or len(X) >= budget:
+            record(rnd)
     pc, po = pareto_front(X, F)
-    return DSEResult(pc, po, budget, stats=engine.stats.as_dict())
+    return DSEResult(pc, po, budget, history=history,
+                     stats=engine.stats.as_dict())
 
 
 def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
              seed: int = 0, pop: int = 64, variant: str = "nsga3",
-             stagnation: int = 5, ref_divisions: int = 6) -> DSEResult:
+             stagnation: int = 5, ref_divisions: int = 6,
+             init: Optional[Sequence[Config]] = None) -> DSEResult:
     """NSGA-II / NSGA-III with restart-on-stagnation (the paper's DSE).
 
     Args:
@@ -271,10 +493,16 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         stagnation:    generations of an unchanged parent population before
                        half the population is replaced with fresh randoms.
         ref_divisions: Das-Dennis divisions for the NSGA-III reference set.
+        init:          warm-start configs seeded into the initial
+                       population (e.g. a previous run's Pareto front);
+                       the remainder is filled with uniform randoms.
     """
     engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
     P = np.stack([rng.integers(0, s, pop) for s in sizes], 1)
+    seeded = _clip_init(init, sizes, pop)
+    if seeded:
+        P[:len(seeded)] = np.asarray(seeded, np.int64)
     F = engine([tuple(r) for r in P])
     evaluated = pop
     refs = das_dennis(F.shape[1], ref_divisions)
@@ -282,6 +510,15 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
     archive_F = [F]
     stale = 0
     prev_key = None
+    history: List[Dict] = []
+    hv_ref = hv_reference(F)
+
+    def record(parent_front: np.ndarray) -> None:
+        history.append({"generation": len(history), "evaluated": evaluated,
+                        "front_size": len(parent_front),
+                        "hypervolume": hypervolume(parent_front, hv_ref)})
+
+    record(F[non_dominated_sort(F)[0]])
     while evaluated < budget:
         Q = _crossover_mutate(P, sizes, rng)
         FQ = engine([tuple(r) for r in Q])
@@ -320,11 +557,20 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         else:
             stale = 0
         prev_key = key
+        record(F[non_dominated_sort(F)[0]])
     allF = np.concatenate(archive_F, 0)
     pc, po = pareto_front(archive_X, allF)
-    return DSEResult(pc, po, evaluated, stats=engine.stats.as_dict())
+    return DSEResult(pc, po, evaluated, history=history,
+                     stats=engine.stats.as_dict())
+
+
+def _run_islands(*args, **kwargs) -> DSEResult:
+    # lazy import: islands.py builds on this module's samplers
+    from repro.core.islands import run_islands
+    return run_islands(*args, **kwargs)
 
 
 SAMPLERS = {"random": run_random, "tpe": run_tpe,
             "nsga2": lambda *a, **k: run_nsga(*a, variant="nsga2", **k),
-            "nsga3": lambda *a, **k: run_nsga(*a, variant="nsga3", **k)}
+            "nsga3": lambda *a, **k: run_nsga(*a, variant="nsga3", **k),
+            "islands": _run_islands}

@@ -38,6 +38,7 @@ benchmarks/engine_bench.py for the batched-vs-naive throughput numbers.
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -282,11 +283,22 @@ class SurrogateEngine:
         self.max_cache = max_cache
         self._cache: Dict[Config, np.ndarray] = {}
         self.stats = EngineStats()
+        # one engine may serve several concurrent samplers (the island
+        # orchestrator, repro.core.islands); the lock keeps cache/stats
+        # mutation and backend dispatch coherent under that sharing
+        self._lock = threading.RLock()
 
     # -- public API --------------------------------------------------------
 
     def __call__(self, configs: Sequence[Config]) -> np.ndarray:
-        """Evaluate a batch of configs; rows align with the input order."""
+        """Evaluate a batch of configs; rows align with the input order.
+
+        Thread-safe: concurrent callers are serialized on an internal
+        lock (results are deterministic regardless of arrival order)."""
+        with self._lock:
+            return self._call_locked(configs)
+
+    def _call_locked(self, configs: Sequence[Config]) -> np.ndarray:
         t_wall = time.perf_counter()
         keys = [tuple(int(v) for v in c) for c in configs]
         self.stats.calls += 1
@@ -317,11 +329,13 @@ class SurrogateEngine:
 
     def reset_stats(self) -> None:
         """Zero the counters (cache contents are kept)."""
-        self.stats = EngineStats()
+        with self._lock:
+            self.stats = EngineStats()
 
     def clear_cache(self) -> None:
         """Drop all memoized results."""
-        self._cache.clear()
+        with self._lock:
+            self._cache.clear()
 
     @property
     def cache_size(self) -> int:

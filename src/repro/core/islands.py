@@ -1,0 +1,462 @@
+"""Island-model parallel DSE: N sampler islands over one shared engine.
+
+The paper's search layer (Sec III-C) is a single serial NSGA-III
+population. Once surrogate evaluation is batched and memoized
+(`repro.core.engine.SurrogateEngine`), the sampler itself becomes the
+bottleneck — and a single population also converges to one basin of the
+4-objective landscape. The island model scales the search layer:
+
+  * **N islands**, each a persistent sampler population (mixed ``nsga3`` /
+    ``nsga2`` / ``tpe`` / ``random`` by default) with a distinct seed, so
+    the islands explore with genuinely different biases;
+  * **one shared `SurrogateEngine`** — every island's evaluations land in
+    the same memo cache, so configs rediscovered by a second island are
+    free, and the engine stats aggregate the whole search;
+  * **ring migration** — every epoch each island sends its Pareto elites
+    to its right-hand neighbour *with their objective rows attached*:
+    migration never re-spends budget, it splices known points into the
+    receiver's population/archive;
+  * **merged global archive** — the final front is the non-dominated set
+    over every config any island evaluated, and `DSEResult.history`
+    traces the merged front's size/hypervolume per epoch.
+
+Unlike naively running the `repro.core.dse` samplers in rounds, islands
+evolve *continuously*: populations persist across epochs (no warm-start
+re-evaluation, no re-randomization), so at equal request budget the
+islands spend exactly as much fresh search as the serial samplers.
+
+Determinism: island seeds derive from (seed, island) only and islands
+interact solely at the epoch barrier, so results are independent of
+thread scheduling — ``parallel=True`` and ``parallel=False`` produce
+identical fronts (asserted in tests/test_dse_parallel.py).
+
+Exposed as `run_islands(...)`, as ``dse.SAMPLERS["islands"]``, and as
+``PipelineConfig(sampler="islands")``.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dse import (Config, DSEResult, EvalFn, _crossover_mutate,
+                            _niche_select, as_engine, crowding_distance,
+                            das_dennis, hv_reference, hypervolume,
+                            non_dominated_sort, pareto_front, tpe_propose)
+
+# islands cycle through these samplers by default (island i runs
+# DEFAULT_SAMPLERS[i % 4])
+DEFAULT_SAMPLERS: Tuple[str, ...] = ("nsga3", "nsga2", "tpe", "random")
+
+
+@dataclass
+class IslandConfig:
+    """Knobs of the island orchestrator (see docs/dse_guide.md).
+
+    Attributes:
+        n_islands:  number of concurrently-evolving islands.
+        samplers:   per-island sampler names, cycled when shorter than
+                    ``n_islands``; each of "nsga3" | "nsga2" | "tpe" |
+                    "random".
+        epochs:     migration rounds: the generation budget is split into
+                    this many epochs, with ring migration (and a history
+                    entry) at each epoch boundary.
+        migrate_k:  Pareto elites each island exports per epoch. Keep this
+                    small (1-4): heavy migration homogenizes the islands
+                    and forfeits the diversity the model exists for.
+        pop:        per-island population size (equals the per-generation
+                    evaluation batch of every island kind).
+        parallel:   step the islands of one generation in a thread pool
+                    (results are schedule-independent; see module
+                    docstring).
+        partition_refs: when several ``nsga3`` islands run, give each a
+                    distinct cone of the Das-Dennis reference rays
+                    (argmax-objective partition) — cone-separated parallel
+                    NSGA-III. Inert for the default mixed fleet (one nsga3
+                    island).
+    """
+    n_islands: int = 4
+    samplers: Sequence[str] = DEFAULT_SAMPLERS
+    epochs: int = 4
+    migrate_k: int = 2
+    pop: int = 16
+    parallel: bool = True
+    partition_refs: bool = True
+
+
+def _island_seed(seed: int, island: int) -> int:
+    """Deterministic per-island seed, decorrelated from `seed`."""
+    return int(np.random.SeedSequence([seed, island]).generate_state(1)[0])
+
+
+def _scalarize(F: np.ndarray) -> np.ndarray:
+    return (F / (np.abs(F).max(0) + 1e-12)).sum(1)
+
+
+# --------------------------------------------------------------------------
+# island state machines
+# --------------------------------------------------------------------------
+
+class _Island:
+    """One persistent sampler population.
+
+    Protocol per generation: ``propose()`` returns the configs to
+    evaluate, ``ingest(F)`` feeds back their objective rows. Both the
+    proposals and every migrant received via ``receive(X, F)`` accumulate
+    into the island archive (`arch_X` / `arch_F`).
+    """
+
+    def __init__(self, name: str, sizes: Sequence[int], pop: int,
+                 seed: int):
+        self.name = name
+        self.sizes = list(sizes)
+        self.pop = pop
+        self.rng = np.random.default_rng(seed)
+        self.arch_X: List[Config] = []
+        self.arch_F: List[np.ndarray] = []
+        self._seen = set()
+
+    # -- archive ------------------------------------------------------------
+
+    def _archive(self, X: Sequence[Config], F: np.ndarray) -> None:
+        self.arch_X += list(X)
+        self.arch_F.append(np.asarray(F, np.float64))
+        self._seen.update(tuple(int(v) for v in c) for c in X)
+
+    def _freshen(self, Q: np.ndarray, tries: int = 8) -> np.ndarray:
+        """Duplicate-avoiding proposals: nudge rows the island has already
+        archived (random-coordinate walk, bounded tries) so budget is not
+        spent re-requesting known points. A key island-level edge: the
+        serial samplers spend ~30% of their requests on cache hits."""
+        batch = set()
+        for k in range(len(Q)):
+            key = tuple(int(v) for v in Q[k])
+            t = 0
+            while (key in self._seen or key in batch) and t < tries:
+                d = int(self.rng.integers(0, len(self.sizes)))
+                Q[k, d] = self.rng.integers(0, self.sizes[d])
+                key = tuple(int(v) for v in Q[k])
+                t += 1
+            batch.add(key)
+        return Q
+
+    def archive(self) -> Tuple[List[Config], np.ndarray]:
+        return self.arch_X, (np.concatenate(self.arch_F, 0)
+                             if self.arch_F else np.zeros((0, 1)))
+
+    def elites(self, k: int) -> Tuple[List[Config], np.ndarray]:
+        """Up to k archive-front members, best scalarized first
+        (deterministic: ties broken by archive order)."""
+        X, F = self.archive()
+        if not X:
+            return [], np.zeros((0, 1))
+        pc, po = pareto_front(X, F)
+        order = np.argsort(_scalarize(po), kind="stable")[:k]
+        return [pc[i] for i in order], po[order]
+
+    def _randoms(self, n: int) -> np.ndarray:
+        return np.stack([self.rng.integers(0, s, n) for s in self.sizes], 1)
+
+    # -- generation protocol -------------------------------------------------
+
+    def propose(self) -> List[Config]:
+        raise NotImplementedError
+
+    def ingest(self, F: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def receive(self, X: Sequence[Config], F: np.ndarray) -> None:
+        """Accept migrants (objective rows attached — costs no budget)."""
+        if not len(X):
+            return
+        self._archive(X, F)
+
+
+class _RandomIsland(_Island):
+    """Uniform exploration; its only job is feeding fresh genetic material
+    into the ring."""
+
+    def propose(self) -> List[Config]:
+        self._Q = self._freshen(self._randoms(self.pop))
+        return [tuple(r) for r in self._Q]
+
+    def ingest(self, F: np.ndarray) -> None:
+        self._archive([tuple(r) for r in self._Q], F)
+
+
+class _TpeIsland(_Island):
+    """Tree-structured-Parzen-lite (see `dse.run_tpe`) over a persistent
+    observation archive; migrants sharpen its good/bad density model."""
+
+    def __init__(self, name, sizes, pop, seed, gamma: float = 0.25):
+        super().__init__(name, sizes, pop, seed)
+        self.gamma = gamma
+
+    def propose(self) -> List[Config]:
+        X, F = self.archive()
+        if len(X) < 2 * len(self.sizes):
+            self._Q = [tuple(r) for r in self._freshen(self._randoms(
+                self.pop))]
+            return self._Q
+        Q = np.asarray(tpe_propose(X, F, self.sizes, self.pop, self.gamma,
+                                   self.rng), np.int64)
+        self._Q = [tuple(r) for r in self._freshen(Q)]
+        return self._Q
+
+    def ingest(self, F: np.ndarray) -> None:
+        self._archive(self._Q, F)
+
+
+class _NsgaIsland(_Island):
+    """NSGA-II/III population identical to one `dse.run_nsga` lineage,
+    reshaped into the generation protocol; migrants replace its
+    worst-scalarized members without re-evaluation."""
+
+    def __init__(self, name, sizes, pop, seed, variant: str,
+                 ref_divisions: int = 6):
+        super().__init__(name, sizes, pop, seed)
+        self.variant = variant
+        self.ref_divisions = ref_divisions
+        self.cone: Optional[int] = None    # objective index, set by the
+        self.P: Optional[np.ndarray] = None  # orchestrator (cone separation)
+        self.F: Optional[np.ndarray] = None
+        self.refs: Optional[np.ndarray] = None
+
+    def propose(self) -> List[Config]:
+        if self.P is None:
+            self._Q = self._randoms(self.pop)      # initial population
+        else:
+            self._Q = self._freshen(
+                _crossover_mutate(self.P, self.sizes, self.rng))
+        return [tuple(r) for r in self._Q]
+
+    def ingest(self, FQ: np.ndarray) -> None:
+        self._archive([tuple(r) for r in self._Q], FQ)
+        if self.P is None:
+            self.P, self.F = self._Q, np.asarray(FQ, np.float64)
+            self.refs = das_dennis(self.F.shape[1], self.ref_divisions)
+            if self.cone is not None:
+                # cone separation: keep only the reference rays leaning
+                # toward this island's objective, so its niching digs deep
+                # in one region of the front while the merge restores
+                # full coverage
+                part = self.refs[self.refs.argmax(1)
+                                 == self.cone % self.refs.shape[1]]
+                if len(part) >= 2:
+                    self.refs = part
+            return
+        R = np.concatenate([self.P, self._Q], 0)
+        FR = np.concatenate([self.F, FQ], 0)
+        fronts = non_dominated_sort(FR)
+        chosen: List[int] = []
+        for fr in fronts:
+            if len(chosen) + len(fr) <= self.pop:
+                chosen += list(fr)
+            else:
+                need = self.pop - len(chosen)
+                if self.variant == "nsga2":
+                    order = np.argsort(-crowding_distance(FR[fr]))
+                    chosen += list(fr[order[:need]])
+                else:
+                    sel = _niche_select(FR[fr], need, self.refs, self.rng)
+                    chosen += list(fr[sel])
+                break
+        idx = np.asarray(chosen)
+        self.P, self.F = R[idx], FR[idx]
+
+    def receive(self, X: Sequence[Config], F: np.ndarray) -> None:
+        super().receive(X, F)
+        if self.P is None or not len(X):
+            return
+        # splice migrants over the worst-scalarized residents (skip exact
+        # duplicates so migration adds information, not copies)
+        resident = {tuple(r) for r in self.P}
+        fresh = [(c, f) for c, f in zip(X, F) if tuple(c) not in resident]
+        if not fresh:
+            return
+        worst = np.argsort(_scalarize(self.F), kind="stable")[::-1]
+        for (c, f), j in zip(fresh, worst):
+            self.P[j] = np.asarray(c, self.P.dtype)
+            self.F[j] = f
+
+
+def _make_island(name: str, sizes: Sequence[int], pop: int, seed: int
+                 ) -> _Island:
+    if name in ("nsga2", "nsga3"):
+        return _NsgaIsland(name, sizes, pop, seed, variant=name)
+    if name == "tpe":
+        return _TpeIsland(name, sizes, pop, seed)
+    if name == "random":
+        return _RandomIsland(name, sizes, pop, seed)
+    raise ValueError(f"unknown island sampler {name!r}")
+
+
+# --------------------------------------------------------------------------
+# orchestrator
+# --------------------------------------------------------------------------
+
+def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+                seed: int = 0, *, n_islands: int = 4,
+                samplers: Optional[Sequence[str]] = None, epochs: int = 4,
+                migrate_k: int = 2, pop: int = 16, parallel: bool = True,
+                partition_refs: bool = True) -> DSEResult:
+    """Run an island-model DSE; drop-in alternative to the serial samplers.
+
+    Args:
+        sizes:     per-dimension categorical cardinalities.
+        evaluate:  batch evaluator or `SurrogateEngine`; wrapped via
+                   `as_engine` and shared by every island.
+        budget:    total evaluation requests across all islands (same
+                   accounting as the serial samplers: every proposed
+                   config counts, engine cache hits included).
+        seed:      master seed; island seeds derive from (seed, island).
+        n_islands / samplers / epochs / migrate_k / pop / parallel /
+        partition_refs:
+                   see `IslandConfig`.
+
+    Returns:
+        `DSEResult` whose front is the merged global archive's
+        non-dominated set and whose ``history`` has one entry per epoch
+        (merged front size + hypervolume under an epoch-0-fixed reference,
+        plus per-island front sizes).
+    """
+    cfg = IslandConfig(n_islands=n_islands,
+                       samplers=tuple(samplers or DEFAULT_SAMPLERS),
+                       epochs=epochs, migrate_k=migrate_k, pop=pop,
+                       parallel=parallel, partition_refs=partition_refs)
+    if cfg.n_islands < 1:
+        raise ValueError("n_islands must be >= 1")
+    engine = as_engine(evaluate)
+    names = [cfg.samplers[i % len(cfg.samplers)]
+             for i in range(cfg.n_islands)]
+    islands = [_make_island(names[i], sizes, cfg.pop,
+                            _island_seed(seed, i))
+               for i in range(cfg.n_islands)]
+    nsga3_islands = [isl for isl in islands
+                     if isinstance(isl, _NsgaIsland) and isl.variant == "nsga3"]
+    if cfg.partition_refs and len(nsga3_islands) >= 2:
+        for c, isl in enumerate(nsga3_islands):
+            isl.cone = c
+
+    per_gen = cfg.n_islands * cfg.pop
+    total_gens = max(1, -(-budget // per_gen))     # ceil: spend the budget
+    n_epochs = max(1, min(cfg.epochs, total_gens))
+    boundaries = {round((e + 1) * total_gens / n_epochs)
+                  for e in range(n_epochs)}
+
+    history: List[Dict] = []
+    evaluated = 0
+    hv_ref: Optional[np.ndarray] = None
+    pc: List[Config] = []
+    po = np.zeros((0, 1))
+
+    def step(isl: _Island) -> int:
+        X = isl.propose()
+        isl.ingest(engine(X))
+        return len(X)
+
+    pool = (ThreadPoolExecutor(max_workers=cfg.n_islands)
+            if cfg.parallel and cfg.n_islands > 1 else None)
+    try:
+        for gen in range(1, total_gens + 1):
+            if pool is not None:
+                evaluated += sum(pool.map(step, islands))
+            else:
+                evaluated += sum(step(isl) for isl in islands)
+
+            if gen not in boundaries:
+                continue
+            # ring migration: i sends its elites (with objective rows —
+            # no re-evaluation) to (i+1) mod N
+            outbox = [isl.elites(cfg.migrate_k) for isl in islands]
+            for i, (mx, mf) in enumerate(outbox):
+                islands[(i + 1) % cfg.n_islands].receive(mx, mf)
+
+            allX: List[Config] = []
+            allF: List[np.ndarray] = []
+            per_island = {}
+            for i, isl in enumerate(islands):
+                ax, af = isl.archive()
+                allX += ax
+                allF.append(af)
+                fx, _ = pareto_front(ax, af)
+                per_island[f"{i}:{names[i]}"] = len(fx)
+            F = np.concatenate(allF, 0)
+            if hv_ref is None:
+                hv_ref = hv_reference(F)
+            pc, po = pareto_front(allX, F)
+            history.append({"generation": gen, "evaluated": evaluated,
+                            "front_size": len(pc),
+                            "hypervolume": hypervolume(po, hv_ref),
+                            "islands": per_island})
+    finally:
+        if pool is not None:
+            pool.shutdown()
+
+    # the final generation is always an epoch boundary, so (pc, po) is the
+    # merged global front over every island archive
+    return DSEResult(pc, po, evaluated, history=history,
+                     stats=engine.stats.as_dict())
+
+
+def library_proxy_evaluator(app, entries: Dict[str, Sequence]) -> EvalFn:
+    """Cheap vectorized analytic evaluator over an accelerator's pruned
+    library: [area, power, latency, 1 - exp(-sum mre)] per config.
+
+    Area/power are the synthesis oracle's sums (fixed components folded
+    into a constant); **latency is the oracle's true longest-path delay**
+    (node latency + fanout wire delay, maximized over all source→sink
+    paths of the broken-back-edge DAG), computed as a (batch, paths)
+    matmul against a precomputed path-incidence matrix. Only the oracle's
+    deterministic jitter and the SSIM functional model are dropped, so the
+    landscape keeps the critical-path plateau structure of the real
+    problem. ~Free per config: search-layer benchmarks and tests
+    (benchmarks/dse_bench.py, tests/test_dse_parallel.py) measure the
+    sampler rather than the surrogate.
+    """
+    import networkx as nx
+
+    from repro.accel.synth import (FIXED_PPA, LEAKAGE_FRAC,
+                                   acyclic_dataflow, wire_delay)
+
+    unit_ids = [n.id for n in app.unit_nodes]
+    uidx = {nid: j for j, nid in enumerate(unit_ids)}
+    tables = [np.asarray([[e.area, e.power, e.latency, e.mre]
+                          for e in entries[node.kind]], np.float64)
+              for node in app.unit_nodes]
+    fixed = {n.id: n for n in app.nodes if n.fixed}
+    area0 = sum(FIXED_PPA[n.kind]["area"] for n in fixed.values())
+    power0 = sum(FIXED_PPA[n.kind]["power"] for n in fixed.values())
+
+    g = acyclic_dataflow(app)          # synth's DAG, shared code path
+    srcs = [n for n in g.nodes if g.in_degree(n) == 0]
+    snks = [n for n in g.nodes if g.out_degree(n) == 0]
+    inc_rows, consts = [], []
+    for s in srcs:
+        for t in snks:
+            for path in nx.all_simple_paths(g, s, t):
+                row = np.zeros(len(unit_ids))
+                const = 0.0
+                for nid in path:
+                    const += wire_delay(g, nid)
+                    if nid in fixed:
+                        const += FIXED_PPA[fixed[nid].kind]["latency"]
+                    else:
+                        row[uidx[nid]] = 1.0
+                inc_rows.append(row)
+                consts.append(const)
+    inc = np.asarray(inc_rows)                      # (paths, units)
+    consts = np.asarray(consts)
+
+    def evaluate(configs: Sequence[Config]) -> np.ndarray:
+        C = np.asarray(configs, np.int64)
+        rows = np.stack([t[C[:, j]] for j, t in enumerate(tables)], 1)
+        area = rows[..., 0].sum(1) + area0
+        power = (rows[..., 1].sum(1) + power0) * (1 + LEAKAGE_FRAC)
+        latency = (rows[..., 2] @ inc.T + consts).max(1)
+        err = 1.0 - np.exp(-rows[..., 3].sum(1))
+        return np.stack([area, power, latency, err], 1)
+
+    return evaluate

@@ -11,7 +11,11 @@ benchmark entry.
 All three surrogates are served to the DSE loop through
 `repro.core.engine.SurrogateEngine` (batched chunked inference, config
 memoization, optional Pallas kernel dispatch); its throughput counters are
-surfaced as ``PipelineResult.metrics["engine"]``.
+surfaced as ``PipelineResult.metrics["engine"]``. The search layer is
+pluggable via ``sampler``: the serial samplers of `repro.core.dse` or the
+island-model orchestrator (`sampler="islands"`,
+`repro.core.islands.run_islands`) — per-generation convergence traces land
+in ``PipelineResult.metrics["dse_history"]``.
 """
 from __future__ import annotations
 
@@ -45,7 +49,8 @@ class PipelineConfig:
     epochs: int = 30
     dse_budget: int = 2000
     dse_pop: int = 64
-    sampler: str = "nsga3"
+    sampler: str = "nsga3"          # nsga3 | nsga2 | tpe | random | islands
+    dse_islands: int = 4            # island count for sampler="islands"
     seed: int = 0
     use_critical_path: bool = True
     surrogate: str = "gnn"          # gnn | rf | oracle
@@ -54,7 +59,8 @@ class PipelineConfig:
 
     @staticmethod
     def paper_faithful(app: str) -> "PipelineConfig":
-        n = {"sobel": 55_000, "gaussian": 105_000, "kmeans": 105_000}[app]
+        n = {"sobel": 55_000, "gaussian": 105_000, "kmeans": 105_000,
+             "dct8": 105_000, "fir15": 105_000}[app]
         return PipelineConfig(app=app, n_samples=n, hidden=300, n_layers=5,
                               epochs=100, dse_budget=20_000)
 
@@ -150,13 +156,21 @@ def run(cfg: PipelineConfig, verbose: bool = False) -> PipelineResult:
     t0 = time.time()
     sizes = [len(entries[n.kind]) for n in app.unit_nodes]
     sampler = dse.SAMPLERS[cfg.sampler]
-    res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
-                  pop=cfg.dse_pop) if cfg.sampler.startswith("nsga") else \
-        sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed)
+    if cfg.sampler == "islands":
+        # dse_pop is the *global* population; islands split it evenly
+        res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
+                      n_islands=cfg.dse_islands,
+                      pop=max(2, cfg.dse_pop // cfg.dse_islands))
+    elif cfg.sampler.startswith("nsga"):
+        res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
+                      pop=cfg.dse_pop)
+    else:
+        res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed)
     t["dse"] = time.time() - t0
     metrics = dict(metrics)
     metrics["engine"] = {"backend": engine.backend,
                          **engine.stats.as_dict()}
+    metrics["dse_history"] = res.history
 
     return PipelineResult(cfg, report, space, metrics, res.pareto_configs,
                           res.pareto_objs, t, ds, engine)

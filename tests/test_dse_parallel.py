@@ -1,0 +1,275 @@
+"""Vectorized Pareto kernels (parity vs reference), hypervolume, DSE
+history traces, and the island-model orchestrator."""
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.core import islands as islands_lib
+from repro.core.islands import library_proxy_evaluator, run_islands
+
+
+# --------------------------------------------------------------------------
+# vectorized kernels: randomized parity vs the reference implementations
+# --------------------------------------------------------------------------
+
+def _random_instances(n_trials, seed=0, with_dups=True):
+    rng = np.random.default_rng(seed)
+    for t in range(n_trials):
+        n = int(rng.integers(1, 48))
+        m = int(rng.integers(2, 6))
+        F = rng.random((n, m))
+        if with_dups and t % 3 == 0 and n >= 4:
+            # duplicated and dominated rows exercise the tie paths
+            F[n // 2] = F[0]
+            F[-1] = F[0] + 1.0
+        yield t, F
+
+
+def test_non_dominated_sort_parity_randomized():
+    """Acceptance: vectorized sort matches the reference on 200+ random
+    instances (duplicates and dominated rows included)."""
+    checked = 0
+    for t, F in _random_instances(220):
+        fronts_v = dse.non_dominated_sort(F)
+        fronts_r = dse.non_dominated_sort_ref(F)
+        assert len(fronts_v) == len(fronts_r), t
+        for fv, fr in zip(fronts_v, fronts_r):
+            assert np.array_equal(fv, fr), t
+        # fronts partition all indices
+        allidx = np.sort(np.concatenate(fronts_v))
+        assert np.array_equal(allidx, np.arange(len(F))), t
+        # the archive-scale first-front mask agrees with fronts[0]
+        assert np.array_equal(np.where(dse.pareto_mask(F))[0],
+                              fronts_r[0]), t
+        checked += 1
+    assert checked >= 200
+
+
+def test_niche_select_parity_randomized():
+    rng = np.random.default_rng(7)
+    for t in range(200):
+        n = int(rng.integers(2, 48))
+        m = int(rng.integers(2, 5))
+        F = rng.random((n, m))
+        refs = dse.das_dennis(m, int(rng.integers(3, 7)))
+        need = int(rng.integers(1, n + 1))
+        sel_v = dse._niche_select(F, need, refs, np.random.default_rng(t))
+        sel_r = dse._niche_select_ref(F, need, refs,
+                                      np.random.default_rng(t))
+        assert np.array_equal(sel_v, sel_r), t
+
+
+def test_non_dominated_sort_layers():
+    F = np.array([[0.0, 0.0], [1.0, 1.0], [0.0, 1.0], [2.0, 2.0]])
+    fronts = dse.non_dominated_sort(F)
+    assert 0 in fronts[0]
+    assert 3 in fronts[-1]
+    assert dse.non_dominated_sort(np.zeros((0, 2))) == []
+
+
+# --------------------------------------------------------------------------
+# hypervolume
+# --------------------------------------------------------------------------
+
+def test_hypervolume_2d_exact():
+    F = np.array([[0.0, 2.0], [1.0, 1.0], [2.0, 0.0]])
+    ref = np.array([3.0, 3.0])
+    # rectangles: (3-0)*(3-2) + (3-1)*(2-1) + (3-2)*(1-0) = 3 + 2 + 1
+    assert dse.hypervolume(F, ref) == pytest.approx(6.0)
+    # dominated rows must not change the value
+    F2 = np.vstack([F, [[2.5, 2.5]]])
+    assert dse.hypervolume(F2, ref) == pytest.approx(6.0)
+
+
+def test_hypervolume_mc_deterministic_and_monotone():
+    rng = np.random.default_rng(0)
+    F = rng.random((40, 4))
+    ref = dse.hv_reference(F)
+    hv1 = dse.hypervolume(F, ref)
+    hv2 = dse.hypervolume(F, ref)
+    assert hv1 == hv2                           # fixed-seed MC
+    # a subset of the points can never dominate more volume
+    assert dse.hypervolume(F[:10], ref) <= hv1 + 1e-12
+    assert dse.hypervolume(np.zeros((0, 4)), ref) == 0.0
+
+
+# --------------------------------------------------------------------------
+# DSEResult.history
+# --------------------------------------------------------------------------
+
+def _toy_eval(configs):
+    a = np.asarray(configs, np.float64)
+    return np.stack([a.sum(1), 9 * 6 - a.sum(1) + a.std(1)], 1)
+
+
+@pytest.mark.parametrize("sampler", ["random", "tpe", "nsga2", "nsga3"])
+def test_init_warm_start(sampler):
+    """`init=` seeds the search: warm-start configs are evaluated (they
+    land in the archive/front when non-dominated) and out-of-range
+    migrant coordinates are clamped instead of crashing."""
+    best = (0,) * 6                               # optimal corner for obj 0
+    res = dse.SAMPLERS[sampler]([10] * 6, _toy_eval, 200, seed=0,
+                                init=[best, (99,) * 6])
+    assert best in res.pareto_configs
+    assert all(all(0 <= v <= 9 for v in c) for c in res.pareto_configs)
+
+
+@pytest.mark.parametrize("sampler", ["random", "tpe", "nsga2", "nsga3"])
+def test_history_populated(sampler):
+    res = dse.SAMPLERS[sampler]([10] * 6, _toy_eval, 300, seed=0)
+    assert res.history, sampler
+    for entry in res.history:
+        assert {"generation", "evaluated", "front_size",
+                "hypervolume"} <= set(entry)
+        assert entry["front_size"] >= 1
+        assert entry["hypervolume"] >= 0.0
+    evald = [e["evaluated"] for e in res.history]
+    assert evald == sorted(evald)
+    assert evald[-1] <= res.evaluated
+
+
+# --------------------------------------------------------------------------
+# island orchestrator
+# --------------------------------------------------------------------------
+
+def test_islands_smoke_tiny_budget():
+    """The CI smoke configuration: pop=8, budget=64."""
+    res = run_islands([10] * 6, _toy_eval, 64, seed=0, n_islands=4, pop=8,
+                      epochs=2, migrate_k=2)
+    assert len(res.pareto_configs) >= 1
+    assert res.evaluated >= 64
+    assert res.history and "islands" in res.history[0]
+    assert res.stats["configs"] == res.evaluated
+
+
+def test_islands_registered_as_sampler():
+    res = dse.SAMPLERS["islands"]([8] * 5, _toy_eval, 64, seed=1,
+                                  n_islands=2, pop=8, epochs=2)
+    assert len(res.pareto_configs) >= 1
+
+
+def test_islands_deterministic_and_schedule_independent():
+    """Same seed -> identical result; threaded == sequential stepping."""
+    kw = dict(n_islands=4, pop=8, epochs=3, migrate_k=2)
+    a = run_islands([10] * 6, _toy_eval, 192, seed=5, **kw)
+    b = run_islands([10] * 6, _toy_eval, 192, seed=5, **kw)
+    c = run_islands([10] * 6, _toy_eval, 192, seed=5, parallel=False, **kw)
+    assert a.pareto_configs == b.pareto_configs == c.pareto_configs
+    np.testing.assert_array_equal(a.pareto_objs, c.pareto_objs)
+    assert [e["front_size"] for e in a.history] == \
+        [e["front_size"] for e in c.history]
+    assert [e["hypervolume"] for e in a.history] == \
+        [e["hypervolume"] for e in c.history]
+
+
+def test_islands_migration_changes_search():
+    """Migration must actually couple the islands: disabling it (k=0)
+    yields a different (deterministically different) search."""
+    kw = dict(n_islands=3, pop=8, epochs=4,
+              samplers=("nsga3", "nsga2", "tpe"))
+    with_mig = run_islands([10] * 6, _toy_eval, 256, seed=3, migrate_k=3,
+                           **kw)
+    without = run_islands([10] * 6, _toy_eval, 256, seed=3, migrate_k=0,
+                          **kw)
+    assert with_mig.pareto_configs != without.pareto_configs
+
+
+def test_island_seeds_distinct():
+    seeds = {islands_lib._island_seed(0, i) for i in range(8)}
+    assert len(seeds) == 8
+    assert islands_lib._island_seed(0, 1) != islands_lib._island_seed(1, 1)
+
+
+def test_islands_rejects_bad_args():
+    with pytest.raises(ValueError):
+        run_islands([4] * 3, _toy_eval, 32, n_islands=0)
+    with pytest.raises(ValueError):
+        run_islands([4] * 3, _toy_eval, 32, samplers=("bogus",))
+
+
+# --------------------------------------------------------------------------
+# engine thread safety (the sharing contract islands rely on)
+# --------------------------------------------------------------------------
+
+def test_engine_concurrent_callers_consistent():
+    from repro.core.engine import SurrogateEngine
+
+    calls = []
+
+    def backend(configs):
+        calls.append(len(configs))
+        a = np.asarray(configs, np.float64)
+        return np.stack([a.sum(1), a.max(1)], 1)
+
+    eng = SurrogateEngine(backend, chunk_size=64)
+    rng = np.random.default_rng(0)
+    batches = [[tuple(int(v) for v in rng.integers(0, 6, 4))
+                for _ in range(32)] for _ in range(8)]
+    with ThreadPoolExecutor(max_workers=4) as ex:
+        outs = list(ex.map(eng, batches))
+    for b, y in zip(batches, outs):
+        a = np.asarray(b, np.float64)
+        np.testing.assert_allclose(y, np.stack([a.sum(1), a.max(1)], 1))
+    # unique configs across all batches were evaluated exactly once
+    assert eng.stats.evaluated == len({c for b in batches for c in b})
+
+
+# --------------------------------------------------------------------------
+# acceptance: islands vs single-population nsga3 on the Sobel space
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sobel_proxy():
+    from repro.accel import apps as apps_lib
+    from repro.core import pruning
+
+    app = apps_lib.APPS["sobel"]
+    pruned, _ = pruning.prune_library()
+    entries = {k: pruned[k] for k in {n.kind for n in app.unit_nodes}}
+    sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+    return sizes, library_proxy_evaluator(app, entries)
+
+
+def test_islands_hv_ge_serial_nsga3_on_sobel(sobel_proxy):
+    """Acceptance: a 4-island run's merged front reaches at least the
+    single-population nsga3 hypervolume at equal total budget (fixed
+    seed; deterministic, including the cone-partitioned nsga3 fleet and
+    the fixed-seed MC hypervolume)."""
+    sizes, evaluate = sobel_proxy
+    budget = 1024
+    serial = dse.run_nsga(sizes, evaluate, budget, seed=2, pop=32)
+    isl = run_islands(sizes, evaluate, budget, seed=2, n_islands=4,
+                      samplers=("nsga3",) * 4, pop=8, epochs=4,
+                      migrate_k=2)
+    assert isl.evaluated <= serial.evaluated + 64   # equal budget regime
+    ref = dse.hv_reference(np.concatenate([serial.pareto_objs,
+                                           isl.pareto_objs], 0))
+    hv_serial = dse.hypervolume(serial.pareto_objs, ref, n_samples=16384)
+    hv_islands = dse.hypervolume(isl.pareto_objs, ref, n_samples=16384)
+    assert hv_islands >= hv_serial
+
+
+def test_library_proxy_latency_matches_oracle_ranking(sobel_proxy):
+    """The proxy's longest-path latency must track the synthesis oracle
+    (same topology, no jitter): check correlation on random configs."""
+    from repro.accel import apps as apps_lib
+    from repro.accel import synth
+    from repro.core import pruning
+
+    sizes, evaluate = sobel_proxy
+    app = apps_lib.APPS["sobel"]
+    pruned, _ = pruning.prune_library()
+    entries = {k: pruned[k] for k in {n.kind for n in app.unit_nodes}}
+    rng = np.random.default_rng(0)
+    cfgs = [tuple(int(rng.integers(0, s)) for s in sizes)
+            for _ in range(24)]
+    proxy_lat = evaluate(cfgs)[:, 2]
+    oracle_lat = []
+    for c in cfgs:
+        choice = {node.id: entries[node.kind][i]
+                  for node, i in zip(app.unit_nodes, c)}
+        oracle_lat.append(synth.synthesize(app, choice)["latency"])
+    r = np.corrcoef(proxy_lat, np.asarray(oracle_lat))[0, 1]
+    assert r > 0.99     # identical up to the oracle's deterministic jitter
