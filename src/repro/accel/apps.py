@@ -14,6 +14,7 @@ Accuracy = mean SSIM between approximate and exact outputs on the image set.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Sequence, Tuple
 
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.accel import library as lib
+from repro.accel import units as units_lib
 
 
 @dataclass(frozen=True)
@@ -377,3 +379,199 @@ def accuracy_ssim(app: AccelDef, choice: Dict[str, lib.LibEntry],
     if exact_out is None:
         exact_out = app.run(make_impls(app, exact_choice(app)), images)
     return float(ssim(approx, exact_out))
+
+
+# --------------------------------------------------------------------------
+# config-batched functional model (batched ground-truth labeling)
+# --------------------------------------------------------------------------
+#
+# `accuracy_ssim` re-traces and re-dispatches the whole functional model
+# once per configuration — the dataset-construction hot spot. The batched
+# path evaluates a (B, n_units) block of configurations through ONE traced
+# program:
+#
+#   * multipliers and sqrt (the transcendental-heavy families: mitchell,
+#     drum, pwl, newton) go through stacked LUT truth tables
+#     (`library.stacked_lut`) with the per-config library choice folded
+#     into the table index — dispatched to the Pallas `kernels.lut_eval`
+#     kernel on TPU, a pure-JAX gather elsewhere;
+#   * adders/subtractors, whose widened truth tables would need 2^24-2^32
+#     entries, are evaluated analytically with the family id and cut
+#     parameter as traced per-config scalars (`units.addsub_batched`);
+#   * the per-config closure is vmapped over the config axis and jitted,
+#     so each app traces once per (entries, image-shape) instead of once
+#     per config, and the vectorized SSIM reduces straight to (B,) scores.
+
+
+class LutDomainError(RuntimeError):
+    """An app drove a LUT-tabulated unit outside its table domain."""
+
+
+def _entries_items(app: AccelDef, entries: Dict[str, Sequence]
+                   ) -> Tuple[Tuple[str, Tuple[lib.LibEntry, ...]], ...]:
+    """Hashable (kind, entries) signature restricted to the app's kinds."""
+    kinds = {n.kind for n in app.unit_nodes}
+    return tuple(sorted((k, tuple(entries[k])) for k in kinds))
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_label_fn(app_name: str, entries_items, backend: str):
+    """Compiled labeler: (C (B,U) int32, images, exact_out) -> ((B,) ssim,
+    guard dict); two jitted stages (vmapped functional model, vmapped
+    SSIM). `guard_meta` maps guard tags to LUT domains; it is filled at
+    trace time and read by the caller to validate table coverage."""
+    app = APPS[app_name]
+    entries = dict(entries_items)
+    guard_meta: Dict[str, Tuple[str, int, int]] = {}
+
+    node_data = []
+    for node in app.unit_nodes:
+        ent = tuple(entries[node.kind])
+        kind = units_lib.KINDS[node.kind]
+        if node.kind in lib.LUT_DOMAINS:
+            ea, eb = lib.lut_domain(app_name, node.kind)
+            table = jnp.asarray(lib.stacked_lut(ent, ea, eb))
+            node_data.append(("lut", node, kind, ea, eb, table))
+        else:
+            fam, k, seg = lib.addsub_dispatch(ent)
+            node_data.append(("analytic", node, kind, jnp.asarray(fam),
+                              jnp.asarray(k), jnp.asarray(seg)))
+
+    def _lut_impl(node, kind, ea, eb, table, e, guards, counts):
+        unary = kind.op == "sqrt"
+
+        def gather(tab, af, bf, wb):
+            if backend == "pallas":
+                from repro.kernels import ops as kernel_ops
+                return kernel_ops.lut_eval(tab, af, bf, wb)
+            return jnp.take(tab, (af << wb) | bf, axis=0)
+
+        def excess(x, bits):
+            # >0 iff x leaves [0, 2^bits), by how much; ONE reduction per
+            # operand (reductions are costly here: a consuming reduction
+            # makes XLA CPU re-evaluate the operand's fused producers)
+            return jnp.max(jnp.maximum(-x, x - ((1 << bits) - 1)))
+
+        def impl(a, b=None):
+            tag = f"{node.id}#{counts.setdefault(node.id, 0)}"
+            counts[node.id] += 1
+            guard_meta[tag] = (kind.name, ea, eb)
+            zero = jnp.zeros((), jnp.int32)
+            if unary:
+                guards[tag] = (excess(a, ea), zero)
+                af = ((e << ea) | a).reshape(-1)
+                return gather(table, af, jnp.zeros_like(af), 0
+                              ).reshape(a.shape)
+            const_b = None
+            if not isinstance(b, jax.core.Tracer):
+                vals = np.unique(np.asarray(b))
+                if vals.size == 1 and 0 <= int(vals[0]) < (1 << eb):
+                    const_b = int(vals[0])
+            af = ((e << ea) | a).reshape(-1)
+            if const_b is not None:
+                # constant coefficient operand (gaussian taps, FIR weights,
+                # DCT cosines): checked at trace time, and its column is
+                # sliced out of the table up front so the gather runs
+                # against a 2^ea-per-entry table that lives in cache
+                guards[tag] = (excess(a, ea), zero)
+                sub = table.reshape(-1, 1 << eb)[:, const_b]
+                out = gather(sub, af, jnp.zeros_like(af), 0)
+            else:
+                guards[tag] = (excess(a, ea), excess(b, eb))
+                out = gather(table, af, b.reshape(-1), eb)
+            return out.reshape(a.shape)
+
+        return impl
+
+    def _analytic_impl(kind, fam_arr, k_arr, seg_arr, e):
+        def impl(a, b):
+            return units_lib.addsub_batched(kind.op, kind.width_a,
+                                            fam_arr[e], k_arr[e],
+                                            seg_arr[e], a, b)
+        return impl
+
+    def model_chunk(C, images):
+        def model_one(cfg):
+            impls, guards, counts = {}, {}, {}
+            for j, nd in enumerate(node_data):
+                if nd[0] == "lut":
+                    _, node, kind, ea, eb, table = nd
+                    impls[node.id] = _lut_impl(node, kind, ea, eb, table,
+                                               cfg[j], guards, counts)
+                else:
+                    _, node, kind, fam, k, seg = nd
+                    impls[node.id] = _analytic_impl(kind, fam, k, seg,
+                                                    cfg[j])
+            return app.run(impls, images), guards
+        return jax.vmap(model_one)(C)
+
+    def ssim_chunk(out, exact_out):
+        return jax.vmap(lambda o: ssim(o, exact_out))(out)
+
+    # two jits on purpose: compiled together, XLA CPU fuses the whole
+    # model into each SSIM moment reduction and re-evaluates it once per
+    # moment (optimization_barrier does not stop it); materializing the
+    # (B, ...) outputs between the stages keeps the model single-pass
+    def run_chunk(C, images, exact_out):
+        out, guards = _jit_model(C, images)
+        return _jit_ssim(out, exact_out), guards
+
+    _jit_model = jax.jit(model_chunk)
+    _jit_ssim = jax.jit(ssim_chunk)
+    return run_chunk, guard_meta
+
+
+def _check_lut_guards(app: AccelDef, guard_meta, guards) -> None:
+    for tag, (ex_a, ex_b) in guards.items():
+        kind_name, ea, eb = guard_meta[tag]
+        over_a, over_b = int(np.max(ex_a)), int(np.max(ex_b))
+        if over_a > 0 or over_b > 0:
+            raise LutDomainError(
+                f"{app.name}: unit {tag} ({kind_name}) left its LUT domain "
+                f"(2^{ea}, 2^{eb}) by up to a:{max(over_a, 0)} "
+                f"b:{max(over_b, 0)}; widen "
+                f"repro.accel.library.LUT_DOMAINS[{kind_name!r}] (or the "
+                f"APP_LUT_DOMAINS override for {app.name!r})")
+
+
+def accuracy_ssim_batch(app: AccelDef, entries: Dict[str, Sequence],
+                        configs, images: jax.Array,
+                        exact_out: jax.Array | None = None, *,
+                        chunk: int = 256, backend: str = "auto"
+                        ) -> np.ndarray:
+    """SSIM labels for a batch of configurations: (B,) float64.
+
+    ``configs`` is a (B, n_units) int block of library-entry indices (the
+    `dataset.sample_configs` layout). Images are evaluated through the
+    config-batched functional model in fixed-size chunks (the ragged tail
+    padded with a repeated row and sliced, so the jit cache holds one
+    shape). ``backend="auto"`` uses the Pallas LUT kernel on TPU and the
+    pure-JAX gather elsewhere; "pallas"/"jnp" force a path.
+    """
+    if backend == "auto":
+        from repro.kernels import ops as kernel_ops
+        backend = "pallas" if kernel_ops.ON_TPU else "jnp"
+    if exact_out is None:
+        exact_out = app.run(make_impls(app, exact_choice(app)), images)
+    fn, guard_meta = _batch_label_fn(app.name, _entries_items(app, entries),
+                                     backend)
+    C = np.asarray(configs, np.int32).reshape(len(configs), -1)
+    B = C.shape[0]
+    out = np.empty(B, np.float64)
+    for lo in range(0, B, chunk):
+        Cc = C[lo:lo + chunk]
+        take = Cc.shape[0]
+        # ragged batches are padded up to a power-of-two bucket (capped at
+        # the chunk size) and sliced, so the jit cache holds at most
+        # log2(chunk)+1 model shapes no matter what batch sizes callers
+        # send — same policy as the engine's fixed-shape chunking
+        bucket = 1
+        while bucket < take:
+            bucket <<= 1
+        bucket = min(bucket, chunk)
+        if take < bucket:
+            Cc = np.concatenate([Cc, np.repeat(Cc[-1:], bucket - take, 0)])
+        scores, guards = fn(jnp.asarray(Cc), images, exact_out)
+        _check_lut_guards(app, guard_meta, guards)
+        out[lo:lo + take] = np.asarray(scores)[:take]
+    return out

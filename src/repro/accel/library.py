@@ -278,3 +278,66 @@ def full_library(counts: Dict[str, int] | None = None
                  ) -> Dict[str, Tuple[LibEntry, ...]]:
     counts = counts or TABLE_III
     return {k: build_library(k, n) for k, n in counts.items()}
+
+
+# --------------------------------------------------------------------------
+# batched-labeling exports (LUT truth tables + analytic dispatch metadata)
+# --------------------------------------------------------------------------
+
+# Effective (wa, wb) input bit widths of the stacked LUT tables used by the
+# config-batched functional model (apps.accuracy_ssim_batch). Only the
+# multiplier and sqrt kinds are tabulated — their families are the
+# transcendental-heavy ones, and their domains stay small. Widths are
+# widened past the nominal port widths because app dataflows legally feed
+# wider values (DCT-8's column pass streams butterfly sums up to ~13 bits
+# into the mul8x4 port). Adders/subtractors are evaluated analytically
+# instead: their worst-case domains (2^24-2^32 entries) don't tabulate,
+# while their logic is a handful of vector ops (units.addsub_batched).
+# A runtime guard raises LutDomainError if an app ever exceeds a domain;
+# widen the entry here if that happens.
+LUT_DOMAINS: Dict[str, Tuple[int, int]] = {
+    "mul8": (9, 9),        # kmeans |sub10| operands <= 383
+    "mul8x4": (13, 4),     # dct8 column-pass butterfly sums <= ~5.2k
+    "sqrt18": (20, 0),     # kmeans distance accumulator <= ~4.6e5
+}
+
+# Per-app tightening: smaller tables gather from cache instead of memory.
+# (app_name, kind) -> (wa, wb); the runtime guard still protects these.
+APP_LUT_DOMAINS: Dict[Tuple[str, str], Tuple[int, int]] = {
+    ("gaussian", "mul8x4"): (8, 4),    # taps are raw pixels <= 255
+    ("fir15", "mul8x4"): (10, 4),      # pre-adder sums <= 765
+}
+
+
+def lut_domain(app_name: str, kind_name: str) -> Tuple[int, int]:
+    return APP_LUT_DOMAINS.get((app_name, kind_name),
+                               LUT_DOMAINS[kind_name])
+
+
+@functools.lru_cache(maxsize=None)
+def stacked_lut(entries: Tuple[LibEntry, ...], ea: int, eb: int
+                ) -> np.ndarray:
+    """Concatenated truth tables, (len(entries) << (ea+eb),) int32.
+
+    Entry ``i``'s value for operands (a, b) sits at index
+    ``(i << (ea+eb)) | (a << eb) | b``, so folding the per-config library
+    choice into the ``a`` operand ``(i << ea) | a`` turns a whole batch of
+    mixed configurations into one gather through `kernels.lut_eval`.
+    """
+    return np.concatenate(
+        [np.asarray(e.inst.lut(ea, eb)) for e in entries])
+
+
+@functools.lru_cache(maxsize=None)
+def addsub_dispatch(entries: Tuple[LibEntry, ...]
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(family ids, cut params, seg carry-kill masks) per entry, for
+    units.addsub_batched."""
+    from repro.accel.units import FAM_IDS, seg_kill_mask
+    fam = np.array([FAM_IDS[e.inst.family] for e in entries], np.int32)
+    k = np.array([e.inst.param[0] if e.inst.param else 0 for e in entries],
+                 np.int32)
+    seg = np.array([seg_kill_mask(e.inst.kind.width_a, e.inst.param[0])
+                    if e.inst.family == "seg" else 0
+                    for e in entries], np.int32)
+    return fam, k, seg

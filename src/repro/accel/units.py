@@ -206,6 +206,59 @@ def sqrt_newton(x, n, seg):
 
 
 # --------------------------------------------------------------------------
+# config-batched dispatch (batched ground-truth labeling)
+# --------------------------------------------------------------------------
+
+# family ids for the analytic per-config adder/subtractor dispatch used by
+# the batched functional model (apps.accuracy_ssim_batch). The multiplier
+# and sqrt families are evaluated through LUT truth tables instead
+# (library.stacked_lut), so they need no ids here.
+FAM_IDS = {"exact": 0, "trunc": 1, "loa": 2, "lox": 3, "aca": 4, "seg": 5}
+
+
+def seg_kill_mask(n: int, k: int) -> int:
+    """Carry-kill mask for `add_seg(n, k)`: one bit below every segment
+    boundary (multiples of ``k`` strictly inside the ``n``-bit word)."""
+    return sum(1 << (c - 1) for c in range(k, n, k))
+
+
+def addsub_batched(op: str, n: int, fam, k, seg_mask, a, b):
+    """Approximate add/sub with the library choice as *traced* values.
+
+    ``fam``/``k``/``seg_mask`` are per-config scalars (family id from
+    FAM_IDS, cut parameter, `seg_kill_mask`), so one trace covers every
+    configuration in a batch; the scalar functions above treat them as
+    Python constants and would retrace per config. Bit-exact vs the
+    scalar families: each branch is the same expression with the
+    parameter sanitized where another family's ``k`` would be out of
+    range. ``seg``'s per-segment Python loop becomes a SWAR partitioned
+    add — clearing the bit below each boundary in both operands stops
+    the carry from crossing it, and the xor restores that bit's true
+    sum — which is the segmented sum for *any* cut with the boundary
+    pattern as data.
+    """
+    if op == "sub":
+        k_t = jnp.where(fam == FAM_IDS["trunc"], k, 0)
+        res = ((a >> k_t) - (b >> k_t)) << k_t       # exact == trunc @ k=0
+        loa = (((a >> k) - (b >> k)) << k) | ((a ^ b) & ((1 << k) - 1))
+        return jnp.where(fam == FAM_IDS["loa"], loa, res)
+    if op != "add":
+        raise ValueError(f"addsub_batched handles add/sub, not {op!r}")
+    k_t = jnp.where(fam == FAM_IDS["trunc"], k, 0)
+    res = ((a >> k_t) + (b >> k_t)) << k_t           # exact == trunc @ k=0
+    upper = ((a >> k) + (b >> k)) << k
+    m = (1 << k) - 1
+    res = jnp.where(fam == FAM_IDS["loa"], upper | ((a | b) & m), res)
+    res = jnp.where(fam == FAM_IDS["lox"], upper | ((a ^ b) & m), res)
+    k1 = jnp.maximum(k, 1)                           # aca needs k >= 1
+    carry = (a >> (k1 - 1)) & (b >> (k1 - 1)) & 1
+    aca = ((((a >> k1) + (b >> k1)) + carry) << k1) | ((a + b) & ((1 << k1) - 1))
+    res = jnp.where(fam == FAM_IDS["aca"], aca, res)
+    seg = ((a & ~seg_mask) + (b & ~seg_mask)) ^ ((a ^ b) & seg_mask)
+    return jnp.where(fam == FAM_IDS["seg"], seg, res)
+
+
+# --------------------------------------------------------------------------
 # instance descriptor
 # --------------------------------------------------------------------------
 
@@ -253,3 +306,23 @@ class UnitInstance:
                      "pwl": lambda a, b=None: sqrt_pwl(a, k.width_a, *prm),
                      "newton": lambda a, b=None: sqrt_newton(a, k.width_a, *prm)}
         return table[fam]
+
+    def lut(self, ea: int | None = None, eb: int | None = None) -> jax.Array:
+        """Materialized truth table over a (possibly widened) input domain.
+
+        ``ea``/``eb`` are the *effective* operand bit widths; they default
+        to the nominal kind widths but the batched functional model widens
+        them (library.LUT_DOMAINS) because app dataflows legally feed
+        values beyond the nominal width (e.g. DCT butterfly sums into the
+        mul8x4 port). The unit functions are well defined on the wider
+        ints, so the widened table agrees with direct evaluation. Unary
+        sqrt tables use ``eb=0`` -> (2^ea,).
+        """
+        ea = self.kind.width_a if ea is None else ea
+        eb = self.kind.width_b if eb is None else eb
+        fn = self.fn()
+        if self.kind.op == "sqrt":
+            return fn(jnp.arange(1 << ea, dtype=jnp.int32)).astype(jnp.int32)
+        a = jnp.repeat(jnp.arange(1 << ea, dtype=jnp.int32), 1 << eb)
+        b = jnp.tile(jnp.arange(1 << eb, dtype=jnp.int32), 1 << ea)
+        return fn(a, b).astype(jnp.int32)

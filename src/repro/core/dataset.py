@@ -4,6 +4,15 @@ Random sampling over the (pruned) design space with symmetric-structure
 deduplication; labels from the simulated synthesis oracle (PPA + critical
 path) and the vectorized functional model (SSIM on the image set).
 
+Labeling runs through the batched ground-truth engine by default
+(`repro.accel.batch_oracle.synthesize_batch` + the config-batched LUT
+functional model `apps.accuracy_ssim_batch`): the whole sample block is
+labeled as (B, ...) array programs instead of a per-config Python loop.
+``build(..., label_backend="loop")`` keeps the scalar reference path —
+tests/test_batch_oracle.py asserts the labels are equivalent (bit-identical
+critical bits, float-tolerance PPA/SSIM). Feature tensors are assembled by
+`ConfigFeaturizer`, which caches every config-independent column.
+
 Paper scale: 55k/105k/105k samples, 90/10 split. CPU-scaled defaults are
 smaller; pass --paper-faithful in benchmarks to use the original sizes.
 """
@@ -107,10 +116,88 @@ def sample_configs(app: apps_lib.AccelDef, n: int, seed: int = 0,
     return out
 
 
+class ConfigFeaturizer:
+    """Config -> node-feature tensors with cached constant columns.
+
+    Every configuration of one accelerator shares graph topology, so the
+    normalized adjacency, mask, fixed-node rows, one-hot kind columns and
+    padding are per-graph constants; only the first 8 feature dims of the
+    arithmetic-unit rows (area, power, latency, mae, mre, mse, wce, approx
+    level) depend on the chosen library entry, and the critical-path
+    column on the oracle. Those are filled by table lookup / assignment —
+    O(batch) numpy ops instead of rebuilding every row in Python.
+
+    `raw` feeds `build` (labels known, stats not yet); `normalized` feeds
+    the DSE hot path (`features_for_configs`, the engine featurizer) and
+    is bit-identical to the per-config reference (tests/test_engine.py).
+    """
+
+    def __init__(self, g: graph_lib.SimpleGraph, app: apps_lib.AccelDef,
+                 entries: Dict[str, Sequence], n_pad: int):
+        self.n_pad = n_pad
+        self.n_nodes = len(g.node_ids)
+        self.sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+        choice0 = {n.id: entries[n.kind][0] for n in app.unit_nodes}
+        xf0 = graph_lib.node_features(g, app, choice0, crit_nodes=None)
+        A, X0, M = graph_lib.pad_batch([g.adj], [xf0], n_pad)
+        self.adj = A[0]                           # (N, N) normalized
+        self.mask = M[0]                          # (N,)
+        self.base_raw = X0[0]                     # (N, F), unit rows dummy
+        self.gidx = [g.node_ids.index(n.id) for n in app.unit_nodes]
+        kind_tables: Dict[str, np.ndarray] = {}
+        self.tables_raw: List[np.ndarray] = []
+        for node in app.unit_nodes:
+            if node.kind not in kind_tables:
+                kind_tables[node.kind] = np.asarray(
+                    [[e.area, e.power, e.latency, e.mae, e.mre, e.mse,
+                      e.wce, float(e.inst.level)]
+                     for e in entries[node.kind]], np.float32)
+            self.tables_raw.append(kind_tables[node.kind])
+        self._norm = None
+
+    def raw(self, configs, crit: Optional[np.ndarray] = None) -> np.ndarray:
+        """(B, n_pad, F) un-normalized features; ``crit`` is an optional
+        (B, n_graph_nodes) critical-bit block from the batch oracle."""
+        C = np.asarray(configs, np.int64).reshape(-1, len(self.gidx))
+        X = np.broadcast_to(self.base_raw,
+                            (C.shape[0],) + self.base_raw.shape).copy()
+        for j, gj in enumerate(self.gidx):
+            X[:, gj, :8] = self.tables_raw[j][C[:, j]]
+        if crit is not None:
+            X[:, :self.n_nodes, graph_lib.CRIT_IDX] = crit
+        return X
+
+    def set_norm(self, x_mean: np.ndarray, x_std: np.ndarray) -> None:
+        base = ((self.base_raw - x_mean) / x_std
+                * self.mask[..., None]).astype(np.float32)
+        mu8, sd8 = x_mean[:8], x_std[:8]
+        tables = [((t - mu8) / sd8).astype(np.float32)
+                  for t in self.tables_raw]
+        self._norm = (base, tables)
+
+    def normalized(self, configs) -> np.ndarray:
+        """(B, n_pad, F) features normalized with the dataset stats."""
+        if self._norm is None:
+            raise RuntimeError("call set_norm(x_mean, x_std) first")
+        base, tables = self._norm
+        C = np.asarray(configs, np.int64).reshape(-1, len(self.gidx))
+        X = np.broadcast_to(base, (C.shape[0],) + base.shape).copy()
+        for j, gj in enumerate(self.gidx):
+            X[:, gj, :8] = tables[j][C[:, j]]
+        return X
+
+
+def _entries_sig(entries: Dict[str, Sequence]) -> Tuple:
+    return tuple(sorted((k, tuple(e.inst.name for e in v))
+                        for k, v in entries.items()))
+
+
 def build(app_name: str, n_samples: int = 2000, seed: int = 0,
           n_images: int = 4, img_size: int = 64,
           lib_entries: Optional[Dict[str, Sequence]] = None,
-          simplify_graph: bool = True, n_pad: int = 32) -> AccelDataset:
+          simplify_graph: bool = True, n_pad: int = 32,
+          label_backend: str = "batched",
+          label_chunk: int = 256) -> AccelDataset:
     app = apps_lib.APPS[app_name]
     g = graph_lib.build_graph(app, simplify=simplify_graph)
     entries = lib_entries or {k: lib.build_library(k) for k in
@@ -125,26 +212,50 @@ def build(app_name: str, n_samples: int = 2000, seed: int = 0,
                         inp)
 
     configs = sample_configs(app, n_samples, seed, lib_entries=entries)
-    adjs, feats, ys, crits = [], [], [], []
-    for cfg_idx in configs:
-        choice = {node.id: entries[node.kind][i]
-                  for node, i in zip(app.unit_nodes, cfg_idx)}
-        rep = synth.synthesize(app, choice)
-        acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
-        xf = graph_lib.node_features(g, app, choice,
-                                     crit_nodes=rep["critical_nodes"])
-        crit_bits = xf[:, graph_lib.CRIT_IDX].copy()
-        xf[:, graph_lib.CRIT_IDX] = 0.0
-        adjs.append(g.adj)
-        feats.append(xf)
-        ys.append([rep["area"], rep["power"], rep["latency"], acc])
-        crits.append(crit_bits)
+    if label_backend == "batched":
+        from repro.accel import batch_oracle
+        C = np.asarray(configs, np.int64)
+        rep = batch_oracle.synthesize_batch(app, entries, C)
+        acc = apps_lib.accuracy_ssim_batch(app, entries, C, inp, exact_out,
+                                           chunk=label_chunk)
+        y_raw = np.stack([rep["area"], rep["power"], rep["latency"], acc],
+                         axis=1).astype(np.float32)
+        # map app-node critical bits onto the (possibly merged) graph nodes
+        pos = {nid: a for a, nid in enumerate(rep["node_ids"])}
+        memb = np.zeros((len(g.node_ids), len(rep["node_ids"])), np.float32)
+        for i, members in enumerate(g.merged_from):
+            for m in members:
+                memb[i, pos[m]] = 1.0
+        crit_graph = (rep["crit"].astype(np.float32)
+                      @ memb.T > 0).astype(np.float32)
+        feat = ConfigFeaturizer(g, app, entries, n_pad)
+        X = feat.raw(C, crit=crit_graph)
+        A = np.broadcast_to(feat.adj,
+                            (len(configs),) + feat.adj.shape).copy()
+        M = np.broadcast_to(feat.mask,
+                            (len(configs),) + feat.mask.shape).copy()
+    elif label_backend == "loop":
+        # scalar reference path: one oracle + functional-model call per
+        # config (kept for parity testing and as the fallback)
+        adjs, feats, ys = [], [], []
+        for cfg_idx in configs:
+            choice = {node.id: entries[node.kind][i]
+                      for node, i in zip(app.unit_nodes, cfg_idx)}
+            rep = synth.synthesize(app, choice)
+            acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
+            xf = graph_lib.node_features(g, app, choice,
+                                         crit_nodes=rep["critical_nodes"])
+            adjs.append(g.adj)
+            feats.append(xf)
+            ys.append([rep["area"], rep["power"], rep["latency"], acc])
+        A, X, M = graph_lib.pad_batch(adjs, feats, n_pad)
+        y_raw = np.asarray(ys, np.float32)
+    else:
+        raise ValueError(f"label_backend must be 'batched' or 'loop', "
+                         f"got {label_backend!r}")
 
-    A, X, M = graph_lib.pad_batch(adjs, feats, n_pad)
-    y_raw = np.asarray(ys, np.float32)
-    crit = np.zeros((len(configs), n_pad), np.float32)
-    for i, c in enumerate(crits):
-        crit[i, :len(c)] = c
+    crit = X[..., graph_lib.CRIT_IDX].copy()
+    X[..., graph_lib.CRIT_IDX] = 0.0
     unit_mask = np.zeros_like(M)
     unit_ids = {n.id for n in app.unit_nodes}
     for j, nid in enumerate(g.node_ids):
@@ -163,19 +274,32 @@ def build(app_name: str, n_samples: int = 2000, seed: int = 0,
                         configs, y_mean, y_std, x_mean, x_std)
 
 
+def featurizer_for(ds: AccelDataset, app: apps_lib.AccelDef,
+                   entries: Dict[str, Sequence]) -> ConfigFeaturizer:
+    """Get-or-build the dataset's normalized featurizer (cached on ``ds``
+    per library signature, so repeated DSE calls reuse the constant
+    columns instead of rebuilding every feature row)."""
+    cache = getattr(ds, "_featurizers", None)
+    if cache is None:
+        cache = {}
+        ds._featurizers = cache
+    key = _entries_sig(entries)
+    feat = cache.get(key)
+    if feat is None:
+        feat = ConfigFeaturizer(ds.graph, app, entries, ds.x.shape[1])
+        feat.set_norm(ds.x_mean, ds.x_std)
+        cache[key] = feat
+    return feat
+
+
 def features_for_configs(ds: AccelDataset, app: apps_lib.AccelDef,
                          entries: Dict[str, Sequence],
                          configs: Sequence[Tuple[int, ...]]
                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Surrogate-input tensors for arbitrary configs (DSE hot path)."""
-    g = ds.graph
-    adjs, feats = [], []
-    for cfg_idx in configs:
-        choice = {node.id: entries[node.kind][i]
-                  for node, i in zip(app.unit_nodes, cfg_idx)}
-        xf = graph_lib.node_features(g, app, choice, crit_nodes=None)
-        adjs.append(g.adj)
-        feats.append(xf)
-    A, X, M = graph_lib.pad_batch(adjs, feats, ds.x.shape[1])
-    Xn = (X - ds.x_mean) / ds.x_std * M[..., None]
+    feat = featurizer_for(ds, app, entries)
+    Xn = feat.normalized(configs)
+    B = Xn.shape[0]
+    A = np.broadcast_to(feat.adj, (B,) + feat.adj.shape).copy()
+    M = np.broadcast_to(feat.mask, (B,) + feat.mask.shape).copy()
     return A, Xn, M

@@ -26,11 +26,12 @@ this module provides the production implementation of that callable:
     * **per-call stats** — configs/sec, cache hit rate, chunk/padding
       counts (`EngineStats`), surfaced into ``PipelineResult.metrics``.
 
-The engine also vectorizes featurization: because every config of one
-accelerator shares the graph topology, adjacency and mask are constants and
-the node-feature tensor is assembled by table lookup
-(`_ConfigFeaturizer`) instead of the per-config Python loop in
-`repro.core.dataset.features_for_configs`.
+Featurization is vectorized through the shared
+`repro.core.dataset.ConfigFeaturizer`: every config of one accelerator
+shares the graph topology, so adjacency, mask and all config-independent
+feature columns are cached constants and the node-feature tensor is
+assembled by table lookup (same cache as
+`repro.core.dataset.features_for_configs`).
 
 See docs/paper_map.md for how this maps onto the paper, and
 benchmarks/engine_bench.py for the batched-vs-naive throughput numbers.
@@ -103,55 +104,26 @@ class EngineStats:
 class _ConfigFeaturizer:
     """Config -> normalized node-feature tensor, by table lookup.
 
-    All configs of one accelerator share graph topology, so the normalized
-    adjacency and mask are per-engine constants; only the first 8 feature
-    dims of the arithmetic-unit rows (area, power, latency, mae, mre, mse,
-    wce, approx level) depend on the chosen library entry. We precompute a
-    normalized row table per unit kind and assemble a batch with fancy
-    indexing — O(batch) numpy ops instead of a per-config Python loop.
-
-    Produces tensors bit-identical to
-    `repro.core.dataset.features_for_configs` (asserted in
-    tests/test_engine.py).
+    Thin engine-facing wrapper over the shared
+    `repro.core.dataset.ConfigFeaturizer` (cached via
+    `dataset.featurizer_for`, so the engine and `features_for_configs`
+    reuse one set of precomputed constant columns). Produces tensors
+    bit-identical to `repro.core.dataset.features_for_configs` (asserted
+    in tests/test_engine.py).
     """
 
     def __init__(self, ds, app, entries: Dict[str, Sequence]):
-        from repro.core import graph as graph_lib
+        from repro.core import dataset as ds_lib
 
-        g = ds.graph
-        self.n_pad = ds.x.shape[1]
-        self.sizes = [len(entries[n.kind]) for n in app.unit_nodes]
-        # base tensor: any valid choice, then unit rows get overwritten
-        choice0 = {n.id: entries[n.kind][0] for n in app.unit_nodes}
-        xf0 = graph_lib.node_features(g, app, choice0, crit_nodes=None)
-        A, X0, M = graph_lib.pad_batch([g.adj], [xf0], self.n_pad)
-        self.adj = A[0]                                    # (N, N) normalized
-        self.mask = M[0]                                   # (N,)
-        self.base = ((X0[0] - ds.x_mean) / ds.x_std
-                     * M[0][..., None]).astype(np.float32)  # (N, F)
-        # per-unit-node graph index + normalized entry table
-        self.gidx: List[int] = []
-        self.tables: List[np.ndarray] = []
-        kind_tables: Dict[str, np.ndarray] = {}
-        mu8, sd8 = ds.x_mean[:8], ds.x_std[:8]
-        for node in app.unit_nodes:
-            self.gidx.append(g.node_ids.index(node.id))
-            if node.kind not in kind_tables:
-                raw = np.asarray(
-                    [[e.area, e.power, e.latency, e.mae, e.mre, e.mse,
-                      e.wce, float(e.inst.level)]
-                     for e in entries[node.kind]], np.float32)
-                kind_tables[node.kind] = ((raw - mu8) / sd8).astype(
-                    np.float32)
-            self.tables.append(kind_tables[node.kind])
+        feat = ds_lib.featurizer_for(ds, app, entries)
+        self._feat = feat
+        self.n_pad = feat.n_pad
+        self.sizes = feat.sizes
+        self.adj = feat.adj                                # (N, N) normalized
+        self.mask = feat.mask                              # (N,)
 
     def __call__(self, configs: Sequence[Config]) -> np.ndarray:
-        C = np.asarray(configs, np.int64)                  # (B, n_units)
-        B = C.shape[0]
-        X = np.broadcast_to(self.base, (B,) + self.base.shape).copy()
-        for j, gj in enumerate(self.gidx):
-            X[:, gj, :8] = self.tables[j][C[:, j]]
-        return X
+        return self._feat.normalized(configs)
 
 
 # --------------------------------------------------------------------------
@@ -461,25 +433,20 @@ class SurrogateEngine:
 
     @classmethod
     def from_oracle(cls, app, entries: Dict[str, Sequence], inp, exact_out,
-                    *, cache: bool = True) -> "SurrogateEngine":
-        """Synthesis-oracle engine (ground truth; per-config, so the main
-        win here is memoization of repeat evaluations)."""
-        from repro.accel import apps as apps_lib
-        from repro.accel import synth
+                    *, cache: bool = True,
+                    chunk_size: int = 256) -> "SurrogateEngine":
+        """Synthesis-oracle engine (ground truth), served by the batched
+        labeling path: vectorized `batch_oracle.synthesize_batch` PPA +
+        the config-batched LUT functional model for SSIM. Fixed-shape
+        chunking keeps the functional model's jit cache bounded."""
+        from repro.accel import batch_oracle
 
         def batch_fn(configs):
-            out = []
-            for c in configs:
-                choice = {node.id: entries[node.kind][i]
-                          for node, i in zip(app.unit_nodes, c)}
-                rep = synth.synthesize(app, choice)
-                acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
-                out.append([rep["area"], rep["power"], rep["latency"],
-                            1 - acc])
-            return np.asarray(out, np.float64)
+            return batch_oracle.objective_rows(app, entries, configs, inp,
+                                               exact_out, chunk=chunk_size)
 
-        return cls(batch_fn, backend="oracle", chunk_size=1 << 30,
-                   fixed_shape=False, cache=cache)
+        return cls(batch_fn, backend="oracle", chunk_size=chunk_size,
+                   fixed_shape=True, cache=cache)
 
 
 def _probe_configs(sizes: Sequence[int], n: int = 4) -> List[Config]:

@@ -28,7 +28,6 @@ import numpy as np
 
 from repro.accel import apps as apps_lib
 from repro.accel import library as lib
-from repro.accel import synth
 from repro.core import dataset as ds_lib
 from repro.core import dse, gnn, models, pruning, training
 from repro.core.engine import SurrogateEngine
@@ -79,15 +78,13 @@ class PipelineResult:
 
 
 def _oracle_eval(app, entries, inp, exact_out):
+    """Ground-truth evaluator on the batched labeling path (vectorized
+    synthesis oracle + config-batched LUT functional model)."""
+    from repro.accel import batch_oracle
+
     def evaluate(configs: Sequence[Tuple[int, ...]]) -> np.ndarray:
-        out = []
-        for c in configs:
-            choice = {node.id: entries[node.kind][i]
-                      for node, i in zip(app.unit_nodes, c)}
-            rep = synth.synthesize(app, choice)
-            acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
-            out.append([rep["area"], rep["power"], rep["latency"], 1 - acc])
-        return np.asarray(out, np.float64)
+        return batch_oracle.objective_rows(app, entries, configs, inp,
+                                           exact_out)
     return evaluate
 
 

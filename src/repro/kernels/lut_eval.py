@@ -27,13 +27,21 @@ def _kernel(lut_ref, a_ref, b_ref, o_ref, *, wb: int):
 @functools.partial(jax.jit, static_argnames=("wb", "block", "interpret"))
 def lut_eval(lut: jax.Array, a: jax.Array, b: jax.Array, *, wb: int,
              block: int = 65536, interpret: bool = True) -> jax.Array:
-    """lut: (2^(wa+wb),) int32; a,b: (M,) int32 -> (M,) int32."""
+    """lut: (2^(wa+wb),) int32; a,b: (M,) int32 -> (M,) int32.
+
+    Ragged inputs are padded up to the next multiple of the block size
+    (with index 0, always in-table) and the result sliced back, so the
+    grid keeps its intended block shape instead of silently degrading to
+    one whole-array block.
+    """
     M = a.shape[0]
     bm = min(block, M)
-    if M % bm:
-        bm = M
-    grid = (M // bm,)
-    return pl.pallas_call(
+    pad = (-M) % bm
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad,), a.dtype)])
+        b = jnp.concatenate([b, jnp.zeros((pad,), b.dtype)])
+    grid = ((M + pad) // bm,)
+    out = pl.pallas_call(
         functools.partial(_kernel, wb=wb),
         grid=grid,
         in_specs=[
@@ -42,9 +50,10 @@ def lut_eval(lut: jax.Array, a: jax.Array, b: jax.Array, *, wb: int,
             pl.BlockSpec((bm,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((M,), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((M + pad,), jnp.int32),
         interpret=interpret,
     )(lut, a, b)
+    return out[:M] if pad else out
 
 
 def build_lut(fn, wa: int, wb: int) -> jax.Array:

@@ -27,12 +27,6 @@ def flash_attention_ref(q, k, v, *, causal=True):
     return o.reshape(B, H, S, D)
 
 
-def lut_eval_ref(lut, a, b):
-    """lut: (2^wa * 2^wb,) int32; a,b: int32 arrays -> lut[a * 2^wb + b]."""
-    wb = int(round(jnp.log2(lut.shape[0]).item())) // 2 if False else None
-    raise NotImplementedError  # use lut_eval_ref_sized
-
-
 def lut_eval_ref_sized(lut, a, b, wb: int):
     return lut[(a << wb) | b]
 

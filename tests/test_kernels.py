@@ -52,19 +52,23 @@ def test_flash_attention_bf16():
                                rtol=0.05, atol=0.05)
 
 
-@pytest.mark.parametrize("kind,wa,wb,idx", [
-    ("mul8", 8, 8, 5), ("mul8x4", 8, 4, 3), ("add8", 8, 8, 7),
+@pytest.mark.parametrize("kind,wa,wb,idx,M", [
+    ("mul8", 8, 8, 5, 4096), ("mul8x4", 8, 4, 3, 4096),
+    ("add8", 8, 8, 7, 4096),
+    # ragged: not a block multiple — must pad to the block size and slice,
+    # not silently degrade to one whole-array block
+    ("mul8x4", 8, 4, 2, 4096 + 700), ("add8", 8, 8, 4, 1023),
 ])
-def test_lut_eval_sweep(kind, wa, wb, idx):
+def test_lut_eval_sweep(kind, wa, wb, idx, M):
     from repro.accel import library as lib
     e = lib.build_library(kind)[idx]
     lut = ops.build_lut(e.inst.fn(), wa, wb)
-    M = 4096
     a = jnp.asarray(RNG.integers(0, 1 << wa, M), jnp.int32)
     b = jnp.asarray(RNG.integers(0, 1 << wb, M), jnp.int32)
     got = ops.lut_eval(lut, a, b, wb, block=1024)
     want = ops.lut_eval(lut, a, b, wb, backend="ref")
     direct = e.inst.fn()(a, b)
+    assert got.shape == (M,)
     assert (got == want).all()
     assert (got == direct).all()
 
