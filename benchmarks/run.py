@@ -6,7 +6,8 @@ benches. Prints `name,value,derived` CSV rows.
 Sections: tables (II,III,VIII), models (V,VI,VII,fig5), dse (IV,fig4,fig6),
 kernels, lm, roofline, bridge, engine (batched-vs-naive surrogate
 throughput, see benchmarks/engine_bench.py), dataset (batched-vs-loop
-labeling throughput, see benchmarks/dataset_bench.py).
+labeling throughput, see benchmarks/dataset_bench.py), train (vmapped
+ensemble vs sequential loop fits, see benchmarks/train_bench.py).
 """
 from __future__ import annotations
 
@@ -36,7 +37,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller datasets/epochs")
     ap.add_argument("--sections", default="tables,models,dse,kernels,lm,"
-                                          "roofline,bridge,engine,dataset")
+                                          "roofline,bridge,engine,dataset,"
+                                          "train")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as T
@@ -74,6 +76,9 @@ def main() -> None:
     if "dataset" in sections:
         from benchmarks import dataset_bench
         _run_gated_bench("dataset_bench", dataset_bench.main, args.quick)
+    if "train" in sections:
+        from benchmarks import train_bench
+        _run_gated_bench("train_bench", train_bench.main, args.quick)
     print(f"# total benchmark time: {time.time() - t0:.1f}s")
 
 

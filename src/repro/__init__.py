@@ -1,0 +1,15 @@
+"""repro — ApproxPilot reproduction + LM substrate.
+
+Package-level numerics policy: partitionable threefry. With the legacy
+(non-partitionable) RNG, lowering `jax.random.*` under `jit` with sharded
+output makes XLA partition the *generator itself*, so the produced values
+depend on the sharding layout — `ParamTable.init` returned different
+weights under different preset rules (observed max param diff ~0.5 between
+the baseline and tp sharding plans, i.e. entirely different models; see
+tests/test_sharding.py::test_perf_presets_match_baseline). Partitionable
+threefry generates sharding-invariant streams, which every determinism and
+preset-parity guarantee in this repo assumes.
+"""
+import jax as _jax
+
+_jax.config.update("jax_threefry_partitionable", True)

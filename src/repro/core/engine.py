@@ -240,11 +240,19 @@ class SurrogateEngine:
                      deterministic backend (true for all evaluators here);
                      disable for stochastic evaluators.
         max_cache:   cache entry bound; oldest entries evicted beyond it.
+        obj_cols:    when the backend returns extra per-config columns
+                     beyond the objectives (the ensemble backend appends a
+                     per-objective std), the first `obj_cols` columns are
+                     the objectives served by ``__call__`` and the rest is
+                     the uncertainty block served by ``uncertainty`` /
+                     ``predict_with_uncertainty``. None = all columns are
+                     objectives (no uncertainty available).
     """
 
     def __init__(self, batch_fn: BatchFn, *, backend: str = "generic",
                  chunk_size: int = 512, fixed_shape: bool = False,
-                 cache: bool = True, max_cache: int = 1_000_000):
+                 cache: bool = True, max_cache: int = 1_000_000,
+                 obj_cols: Optional[int] = None):
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         self._batch_fn = batch_fn
@@ -253,6 +261,7 @@ class SurrogateEngine:
         self.fixed_shape = fixed_shape
         self.cache_enabled = cache
         self.max_cache = max_cache
+        self.obj_cols = obj_cols
         self._cache: Dict[Config, np.ndarray] = {}
         self.stats = EngineStats()
         # one engine may serve several concurrent samplers (the island
@@ -268,7 +277,34 @@ class SurrogateEngine:
         Thread-safe: concurrent callers are serialized on an internal
         lock (results are deterministic regardless of arrival order)."""
         with self._lock:
-            return self._call_locked(configs)
+            out = self._call_locked(configs)
+        return out[:, :self.obj_cols] if self.obj_cols else out
+
+    def uncertainty(self, configs: Sequence[Config]) -> np.ndarray:
+        """Per-config, per-objective uncertainty (ensemble std) rows.
+
+        Served from the same memoized rows as ``__call__`` — the DSE
+        acquisition path can ask for the std of configs it just evaluated
+        at zero extra backend cost. Raises unless the engine was built
+        with an uncertainty-producing backend (`from_gnn_ensemble`)."""
+        if not self.obj_cols:
+            raise ValueError(
+                f"engine backend {self.backend!r} does not produce an "
+                f"uncertainty column (build it with from_gnn_ensemble)")
+        with self._lock:
+            out = self._call_locked(configs)
+        return out[:, self.obj_cols:]
+
+    def predict_with_uncertainty(self, configs: Sequence[Config]
+                                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """(objectives (n, obj_cols), std (n, obj_cols)) in one pass."""
+        if not self.obj_cols:
+            raise ValueError(
+                f"engine backend {self.backend!r} does not produce an "
+                f"uncertainty column (build it with from_gnn_ensemble)")
+        with self._lock:
+            out = self._call_locked(configs)
+        return out[:, :self.obj_cols], out[:, self.obj_cols:]
 
     def _call_locked(self, configs: Sequence[Config]) -> np.ndarray:
         t_wall = time.perf_counter()
@@ -405,6 +441,52 @@ class SurrogateEngine:
 
         return cls(batch_fn, backend=backend, chunk_size=chunk_size,
                    fixed_shape=True, cache=cache)
+
+    @classmethod
+    def from_gnn_ensemble(cls, ens, ds, app, entries: Dict[str, Sequence],
+                          *, chunk_size: int = 512,
+                          cache: bool = True) -> "SurrogateEngine":
+        """Ensemble-GNN engine: objectives = denormalized ensemble MEAN,
+        plus a per-objective ensemble-std uncertainty block (columns
+        [obj_cols:]) for the DSE acquisition path.
+
+        `ens` is a `repro.core.training.EnsembleParams`; every member
+        group runs as one vmapped jit over the member axis (pure-JAX path
+        — the Pallas gnn_mp dispatch stays single-model for now). The std
+        is denormalized with the same per-target scale as the mean; the
+        ssim flip (1 - ssim) leaves its std unchanged.
+        """
+        import jax
+        import jax.numpy as jnp
+        from repro.core import models as models_lib
+
+        feat = _ConfigFeaturizer(ds, app, entries)
+        A = jnp.asarray(feat.adj)
+        m_row = jnp.asarray(feat.mask)
+
+        group_fns = []
+        for g_cfg, params in ens.groups:
+            @jax.jit
+            def gf(X, g_cfg=g_cfg, params=params):
+                B = X.shape[0]
+                adj = jnp.broadcast_to(A, (B,) + A.shape)
+                mask = jnp.broadcast_to(m_row, (B,) + m_row.shape)
+                return jax.vmap(lambda p: models_lib.predict(
+                    g_cfg, p, adj, X, mask)[0])(params)
+            group_fns.append(gf)
+
+        n_obj = len(models_lib.TARGETS)
+
+        def batch_fn(configs):
+            X = jnp.asarray(feat(configs))
+            Y = np.concatenate([np.asarray(gf(X)) for gf in group_fns], 0)
+            mean = ds.denorm_y(Y.mean(0))
+            std = Y.std(0) * np.asarray(ds.y_std)
+            mean[:, 3] = 1 - mean[:, 3]     # ssim -> 1-ssim (minimize)
+            return np.concatenate([mean, std], 1)
+
+        return cls(batch_fn, backend="gnn-ensemble", chunk_size=chunk_size,
+                   fixed_shape=True, cache=cache, obj_cols=n_obj)
 
     @classmethod
     def from_rforest(cls, rf_models: Dict[int, "object"], ds, app,

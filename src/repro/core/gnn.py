@@ -91,7 +91,12 @@ def _layer(cfg: GNNConfig, lp: Dict, adj, h, mask):
 
 
 def apply(cfg: GNNConfig, params: Dict, adj, x, mask, *, rng=None):
-    """Returns (B, N, out) for node-level or (B, out) for graph-level."""
+    """Returns (B, N, out) for node-level or (B, out) for graph-level.
+
+    `rng` gates dropout: training passes a per-step key (threaded from
+    `models.losses` via `models.predict`), inference passes nothing and
+    is deterministic regardless of `cfg.dropout`. Inverted scaling
+    (`/ (1 - p)`) keeps activations unbiased, so no eval-time rescale."""
     h = x * mask[..., None]
     for i, lp in enumerate(params["layers"]):
         h = _layer(cfg, lp, adj, h, mask)

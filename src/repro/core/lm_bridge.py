@@ -111,12 +111,16 @@ def oracle(cfg: ArchConfig, shape: ShapeConfig, ops: List[Dict]):
 
 
 def train_surrogate(cfg: ArchConfig, shape: ShapeConfig, n_samples: int = 400,
-                    epochs: int = 30, seed: int = 0):
+                    epochs: int = 30, seed: int = 0, ensemble: int = 0):
     """Train the paper's two-stage GNN on the LM op-graph design space:
     stage 1 classifies the roofline-critical op ("critical path" transfer),
     stage 2 regresses [step_time, hbm_gb, penalty, 0]. Returns (metrics,
     predict_fn) — demonstrating the full ApproxPilot model, not just its
-    DSE, on the LM framework."""
+    DSE, on the LM framework.
+
+    ``ensemble > 0`` trains that many members as one vmapped scanned run
+    (`training.fit_ensemble`); predictions are the ensemble mean and the
+    metrics gain per-target ``mean_std`` uncertainty columns."""
     import jax
     import jax.numpy as jnp
     from repro.core import gnn, models, training
@@ -161,12 +165,23 @@ def train_surrogate(cfg: ArchConfig, shape: ShapeConfig, n_samples: int = 400,
     tr, te = ds.split(0.9)
     two = models.TwoStageConfig(gnn=gnn.GNNConfig(
         arch="gsae", n_layers=3, hidden=64, feature_dim=X.shape[-1]))
-    params = training.fit_two_stage(two, tr,
-                                    training.TrainConfig(epochs=epochs))
-    metrics = training.evaluate(two, params, ds, te)
+    tc = training.TrainConfig(epochs=epochs, seed=seed)
+    if ensemble > 0:
+        ens, _hist = training.fit_ensemble(two, tr, tc, n_members=ensemble)
+        metrics = training.evaluate_ensemble(ens, ds, te)
+        group_fns = [
+            jax.jit(lambda a, x, m, g=g_cfg, p=p: jax.vmap(
+                lambda pm: models.predict(g, pm, a, x, m)[0])(p))
+            for g_cfg, p in ens.groups]
 
-    jit_predict = jax.jit(lambda a, x, m: models.predict(
-        two, params, a, x, m)[0])
+        def jit_predict(a, x, m):
+            Y = jnp.concatenate([gf(a, x, m) for gf in group_fns], 0)
+            return Y.mean(0)
+    else:
+        params = training.fit_two_stage(two, tr, tc)
+        metrics = training.evaluate(two, params, ds, te)
+        jit_predict = jax.jit(lambda a, x, m: models.predict(
+            two, params, a, x, m)[0])
 
     def _predict_batch(choices):
         Xq = np.stack([feats(c) for c in choices])

@@ -59,12 +59,19 @@ def predict_critical(cfg: TwoStageConfig, params: TwoStageParams,
 
 
 def predict(cfg: TwoStageConfig, params: TwoStageParams, adj, x, mask,
-            teacher_crit=None) -> Tuple[jax.Array, jax.Array]:
+            teacher_crit=None, rng=None) -> Tuple[jax.Array, jax.Array]:
     """Returns (targets (B,4), crit_logits (B,N)).
 
     x must arrive with the crit feature zeroed; it is filled here from
-    stage 1 (or from `teacher_crit` during stage-2 training)."""
-    crit_logits = predict_critical(cfg, params, adj, x, mask)
+    stage 1 (or from `teacher_crit` during stage-2 training).
+
+    `rng` enables dropout in BOTH stages (training only — inference and
+    `evaluate` never pass it, so prediction stays deterministic)."""
+    r1 = r2 = None
+    if rng is not None:
+        r1, r2 = jax.random.split(rng)
+    crit_logits = gnn.apply(cfg.stage1, params.stage1, adj, x, mask,
+                            rng=r1)[..., 0]
     if not cfg.use_critical_path:
         bit = jnp.zeros_like(crit_logits)
     elif teacher_crit is not None:
@@ -72,18 +79,31 @@ def predict(cfg: TwoStageConfig, params: TwoStageParams, adj, x, mask,
     else:
         bit = (jax.nn.sigmoid(crit_logits) > 0.5).astype(x.dtype)
     x2 = x.at[..., CRIT_IDX].set(bit * mask)
-    y = gnn.apply(cfg.stage2, params.stage2, adj, x2, mask)
+    y = gnn.apply(cfg.stage2, params.stage2, adj, x2, mask, rng=r2)
     return y, crit_logits
 
 
-def losses(cfg: TwoStageConfig, params: TwoStageParams, batch
+def losses(cfg: TwoStageConfig, params: TwoStageParams, batch, rng=None
            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """batch: {adj, x (crit zeroed), mask, y (B,4), crit (B,N), unit_mask}."""
+    """batch: {adj, x (crit zeroed), mask, y (B,4), crit (B,N), unit_mask,
+    w (optional (B,) sample weights — 0 rows are padding and contribute
+    nothing to either loss term or its gradients)}.
+
+    `rng` is threaded into `predict` -> `gnn.apply` so `cfg.gnn.dropout`
+    is live during training (it used to be dead code: no caller passed an
+    rng, so the tuned-dropout schedule of Sec IV-A trained without
+    dropout)."""
     y_pred, crit_logits = predict(cfg, params, batch["adj"], batch["x"],
                                   batch["mask"],
-                                  teacher_crit=batch["crit"])
-    reg = jnp.mean((y_pred - batch["y"]) ** 2)
+                                  teacher_crit=batch["crit"], rng=rng)
     um = batch.get("unit_mask", batch["mask"])
+    w = batch.get("w")
+    per_sample = jnp.mean((y_pred - batch["y"]) ** 2, axis=-1)
+    if w is None:
+        reg = per_sample.mean()
+    else:
+        reg = jnp.sum(w * per_sample) / jnp.maximum(w.sum(), 1.0)
+        um = um * w[..., None]
     bce = jnp.sum(um * (jnp.logaddexp(0.0, crit_logits)
                         - crit_logits * batch["crit"])) / \
         jnp.maximum(um.sum(), 1.0)

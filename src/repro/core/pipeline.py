@@ -55,6 +55,10 @@ class PipelineConfig:
     surrogate: str = "gnn"          # gnn | rf | oracle
     eval_chunk: int = 512           # engine chunk size for the DSE loop
     use_kernel: str = "auto"        # Pallas gnn_mp: auto | on | off
+    ensemble_members: int = 0       # >0: vmapped GNN ensemble + uncertainty
+    ensemble_archs: Optional[Tuple[str, ...]] = None  # per-member archs
+    early_stop_patience: int = 0    # >0: early stopping on a val split
+    train_backend: str = "scan"     # scan | loop (reference)
 
     @staticmethod
     def paper_faithful(app: str) -> "PipelineConfig":
@@ -111,12 +115,21 @@ def run(cfg: PipelineConfig, verbose: bool = False) -> PipelineResult:
                           feature_dim=ds.x.shape[-1]),
         use_critical_path=cfg.use_critical_path)
     rf_models: Dict[int, RandomForest] = {}
+    ens = None
     if cfg.surrogate == "gnn":
-        params = training.fit_two_stage(
-            two_cfg, tr, training.TrainConfig(epochs=cfg.epochs,
-                                              seed=cfg.seed),
-            log_every=0 if not verbose else 10)
-        metrics = training.evaluate(two_cfg, params, ds, te)
+        tc = training.TrainConfig(epochs=cfg.epochs, seed=cfg.seed,
+                                  backend=cfg.train_backend,
+                                  patience=cfg.early_stop_patience)
+        if cfg.ensemble_members > 0:
+            ens, _hist = training.fit_ensemble(
+                two_cfg, tr, tc, n_members=cfg.ensemble_members,
+                archs=cfg.ensemble_archs)
+            metrics = training.evaluate_ensemble(ens, ds, te)
+            params = None
+        else:
+            params = training.fit_two_stage(
+                two_cfg, tr, tc, log_every=0 if not verbose else 10)
+            metrics = training.evaluate(two_cfg, params, ds, te)
     elif cfg.surrogate == "rf":
         Xf_tr, Xf_te = tr.flat_features(), te.flat_features()
         metrics = {}
@@ -145,6 +158,9 @@ def run(cfg: PipelineConfig, verbose: bool = False) -> PipelineResult:
         engine = SurrogateEngine.from_oracle(app, entries, inp, exact_out)
     elif cfg.surrogate == "rf":
         engine = SurrogateEngine.from_rforest(rf_models, ds, app, entries)
+    elif ens is not None:
+        engine = SurrogateEngine.from_gnn_ensemble(
+            ens, ds, app, entries, chunk_size=cfg.eval_chunk)
     else:
         engine = SurrogateEngine.from_gnn(two_cfg, params, ds, app, entries,
                                           chunk_size=cfg.eval_chunk,
@@ -168,6 +184,12 @@ def run(cfg: PipelineConfig, verbose: bool = False) -> PipelineResult:
     metrics["engine"] = {"backend": engine.backend,
                          **engine.stats.as_dict()}
     metrics["dse_history"] = res.history
+    if ens is not None and res.pareto_configs:
+        # ensemble std on the selected points: the uncertainty column the
+        # acquisition path sees, served from the engine's memo cache
+        unc = engine.uncertainty(res.pareto_configs)
+        metrics["pareto_uncertainty"] = {
+            n: float(unc[:, i].mean()) for i, n in enumerate(OBJ_NAMES)}
 
     return PipelineResult(cfg, report, space, metrics, res.pareto_configs,
                           res.pareto_objs, t, ds, engine)

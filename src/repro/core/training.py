@@ -1,20 +1,53 @@
-"""Training loop for the two-stage GNN models (jit + scan over minibatches).
+"""Training subsystem for the two-stage GNN models.
 
 Paper setup (Sec IV-A): Adam, lr 1e-3, batch 5, 100 epochs, dropout/lr
 tuned on the test split. Defaults here are CPU-scaled (bigger batch, fewer
-epochs); pass paper_faithful=True to reproduce the original schedule.
+epochs); pass `TrainConfig.paper_faithful()` to reproduce the original
+schedule.
+
+Three layers, all sharing one step function (`_make_step`):
+
+``fit_two_stage(..., backend="scan")``
+    The production path: ONE jitted `lax.scan` over (epochs x steps) with
+    a donated (params, opt) carry — zero per-epoch Python dispatch.
+    Dropout is live (per-step PRNG keys threaded through `models.losses`
+    -> `gnn.apply`); the ragged final batch is pad-and-masked (sample
+    weight 0) instead of silently dropped; optional early stopping tracks
+    a best-params snapshot against a held-out split inside the scan.
+
+``fit_two_stage(..., backend="loop")``
+    The per-epoch Python loop kept as the reference implementation: same
+    batch plan, same key derivation, so scanned-vs-loop parity is exact
+    (asserted in tests/test_training.py) — including at dropout > 0,
+    because per-step dropout keys are derived by `fold_in(key, global
+    step)` in both backends.
+
+``fit_ensemble``
+    `jax.vmap` of the whole scanned training run over a member axis
+    (stacked init params + per-member batch/dropout key streams), so an
+    8-member ensemble trains as one XLA program (benchmarks/train_bench.py
+    gates >= 5x wall-clock vs 8 sequential loop-backend fits). Members may
+    span different GNN architectures: members are grouped per arch (param
+    pytrees differ between archs) and each group trains under one vmap.
+    Ensemble mean/std feed `engine.SurrogateEngine.from_gnn_ensemble` as
+    the DSE uncertainty column.
+
+Data-parallel sharding: ``TrainConfig(data_parallel=True)`` places the
+sample-axis of the dataset tensors on a 1-D device mesh
+(`repro.distributed.meshes.data_parallel_mesh`); the minibatch gather and
+loss all-reduce are then partitioned by XLA. A no-op on one device.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import models
+from repro.core import gnn, models
 from repro.core.dataset import AccelDataset
 
 
@@ -24,11 +57,44 @@ class TrainConfig:
     batch_size: int = 64
     epochs: int = 40
     seed: int = 0
+    backend: str = "scan"        # scan | loop
+    patience: int = 0            # >0 enables early stopping on a val split
+    val_frac: float = 0.1        # held-out fraction when patience > 0
+    min_delta: float = 0.0       # required val-loss improvement
+    data_parallel: bool = False  # shard the sample axis over devices
 
     @staticmethod
     def paper_faithful() -> "TrainConfig":
         return TrainConfig(lr=1e-3, batch_size=5, epochs=100)
 
+
+@dataclass
+class FitHistory:
+    """Per-epoch training trace returned by `fit_two_stage(..., return_history=True)`."""
+    train_loss: np.ndarray          # (epochs, steps) per-step total loss
+    val_loss: Optional[np.ndarray]  # (epochs,) or None when no val split
+    epochs_run: int                 # < epochs when early stopping fired
+
+
+@dataclass
+class EnsembleParams:
+    """Stacked per-member parameters, grouped by architecture.
+
+    groups[i] = (two_stage_cfg, stacked_params) where every leaf of
+    stacked_params carries a leading member axis. `member_arch` lists the
+    arch of each global member index (group order, then member order).
+    """
+    groups: List[Tuple[models.TwoStageConfig, models.TwoStageParams]]
+    member_arch: List[str]
+
+    @property
+    def n_members(self) -> int:
+        return len(self.member_arch)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
 
 def _adam_init(params):
     z = jax.tree.map(jnp.zeros_like, params)
@@ -48,46 +114,458 @@ def _adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
     return params, {"m": m, "v": v, "t": t}
 
 
+# --------------------------------------------------------------------------
+# data plumbing
+# --------------------------------------------------------------------------
+
+_DATA_KEYS = ("adj", "x", "mask", "unit_mask", "y", "crit")
+
+
+def _as_data(ds: AccelDataset) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.asarray(getattr(ds, k)) for k in _DATA_KEYS}
+
+
+def _shard_data(data: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Place the sample axis on a 1-D data mesh (no-op on one device)."""
+    from repro.distributed import meshes as M
+    mesh = M.data_parallel_mesh()
+    if mesh is None:
+        return data
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(a):
+        if a.shape[0] % mesh.shape["data"] != 0:
+            return a
+        spec = P(*(("data",) + (None,) * (a.ndim - 1)))
+        return jax.device_put(a, NamedSharding(mesh, spec))
+    return {k: one(v) for k, v in data.items()}
+
+
+def _shard_members(tree, n_members: int):
+    """Shard the leading (member) axis of a pytree over host devices.
+
+    Member programs are fully independent (no cross-member ops), so SPMD
+    partitioning the leading axis runs members in parallel across devices
+    with ZERO communication — per-member results stay bit-identical to
+    the unsharded run. Uses the largest device prefix that divides
+    `n_members`; a no-op on one device."""
+    devs = jax.devices()
+    k = 0
+    for d in range(min(len(devs), n_members), 0, -1):
+        if n_members % d == 0:
+            k = d
+            break
+    if k <= 1:
+        return tree
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mesh = Mesh(np.asarray(devs[:k]), ("member",))
+
+    def one(a):
+        spec = P(*(("member",) + (None,) * (a.ndim - 1)))
+        return jax.device_put(a, NamedSharding(mesh, spec))
+    return jax.tree.map(one, tree)
+
+
+def _plan_for(tc: TrainConfig, n: int, bs: int):
+    """(idx, w, dropout_key) for one training run, derived from tc.seed
+    the same way in both backends (and per member in `fit_ensemble`)."""
+    pkey, dkey = jax.random.split(jax.random.PRNGKey(tc.seed + 1))
+    idx, w = _batch_plan(pkey, n, bs, tc.epochs)
+    return idx, w, dkey
+
+
+@functools.lru_cache(maxsize=64)
+def _perm_fn(n: int):
+    """Cached jitted (E,2)-keys -> (E,n) permutations program. Without the
+    cache every fit (and every ensemble member) recompiled the sort."""
+    return jax.jit(jax.vmap(lambda k: jax.random.permutation(k, n)))
+
+
+def _batch_plan(key: jax.Array, n: int, bs: int, epochs: int):
+    """(epochs, steps, bs) index + weight arrays; pad-and-mask tail.
+
+    Every sample appears exactly once per epoch: the ragged final batch is
+    padded with index 0 rows carrying weight 0, so `models.losses` masks
+    them out of both loss terms (the old path truncated `perm[:steps*bs]`
+    and silently never trained on n % bs samples each epoch)."""
+    steps = -(-n // bs)
+    pad = steps * bs - n
+    perms = _perm_fn(n)(jax.random.split(key, epochs))    # (E, n)
+    idx = jnp.concatenate(
+        [perms, jnp.zeros((epochs, pad), perms.dtype)], axis=1)
+    w = jnp.concatenate(
+        [jnp.ones((epochs, n), jnp.float32),
+         jnp.zeros((epochs, pad), jnp.float32)], axis=1)
+    return idx.reshape(epochs, steps, bs), w.reshape(epochs, steps, bs)
+
+
+def _split_const(data: Dict[str, jnp.ndarray]):
+    """(varying, constant-row) split of the dataset tensors.
+
+    Every config of one accelerator shares the graph topology, so adj /
+    mask / unit_mask are usually identical across the sample axis; the
+    per-step minibatch gather of a (bs, N, N) adjacency block is then
+    pure memory traffic. Detect constancy once and keep a single row that
+    the step broadcasts lazily (the same trick the inference engine's
+    `ConfigFeaturizer` uses for its cached constant columns)."""
+    var, const = {}, {}
+    for k, v in data.items():
+        if k in ("adj", "mask", "unit_mask") and v.shape[0] > 1 and \
+                bool(jnp.all(v == v[:1])):
+            const[k] = v[0]
+        else:
+            var[k] = v
+    return var, const
+
+
+def _make_step(cfg: models.TwoStageConfig, tc: TrainConfig, data,
+               use_dropout: bool):
+    """(params, opt, idx, w, gstep, drop_key) -> (params, opt, loss)."""
+    var, const = _split_const(data)
+
+    def step(params, opt, idx, w, gstep, drop_key):
+        batch = {k: v[idx] for k, v in var.items()}
+        bs = idx.shape[0]
+        for k, row in const.items():
+            batch[k] = jnp.broadcast_to(row, (bs,) + row.shape)
+        batch["w"] = w
+        rng = jax.random.fold_in(drop_key, gstep) if use_dropout else None
+        (loss, _parts), grads = jax.value_and_grad(
+            lambda p: models.losses(cfg, p, batch, rng=rng),
+            has_aux=True)(params)
+        params, opt = _adam_update(params, grads, opt, tc.lr)
+        return params, opt, loss
+    return step
+
+
+# --------------------------------------------------------------------------
+# single-model training
+# --------------------------------------------------------------------------
+
+def _build_scan_fit(cfg: models.TwoStageConfig, tc: TrainConfig, data,
+                    n: int, val_data=None):
+    """Returns f(params0, idx, w, dkey) -> (params, (train (E,S), val
+    (E,), active (E,))) — pure, vmappable, one lax.scan over epochs with
+    an inner scan over steps. The (idx, w) batch plan and the dropout key
+    are produced OUTSIDE (see `_plan_for`), which keeps the permutation
+    sort out of the big compiled program."""
+    bs = min(tc.batch_size, n)
+    steps = -(-n // bs)
+    use_do = cfg.gnn.dropout > 0
+    step = _make_step(cfg, tc, data, use_do)
+    early = tc.patience > 0 and val_data is not None
+
+    def val_loss_of(params):
+        return models.losses(cfg, params, val_data)[0]
+
+    def fit(params0, idx, w, dkey):
+        gsteps = jnp.arange(tc.epochs * steps,
+                            dtype=jnp.int32).reshape(tc.epochs, steps)
+
+        def body(carry, one):
+            p, o = carry
+            i, wt, g = one
+            p, o, loss = step(p, o, i, wt, g, dkey)
+            return (p, o), loss
+
+        if not early:
+            # no per-epoch bookkeeping needed: ONE flat scan over
+            # (epochs * steps) — about half the compile time of the
+            # nested epoch/step scan below
+            flat = (idx.reshape(-1, bs), w.reshape(-1, bs),
+                    gsteps.reshape(-1))
+            (params, opt), losses = jax.lax.scan(
+                body, (params0, _adam_init(params0)), flat)
+            tr_loss = losses.reshape(tc.epochs, steps)
+            vls = jnp.full((tc.epochs,), jnp.nan, jnp.float32)
+            act = jnp.ones((tc.epochs,), bool)
+            return params, (tr_loss, vls, act)
+
+        def run_epoch(params, opt, inp):
+            (params, opt), losses = jax.lax.scan(body, (params, opt), inp)
+            return params, opt, losses
+
+        def epoch_body(carry, inp):
+            params, opt, best, best_val, bad, stopped = carry
+            p2, o2, losses = run_epoch(params, opt, inp)
+            if early:
+                # once stopped, freeze the carry (scan has a static trip
+                # count; the selected-out epochs are dead weight but the
+                # best snapshot and the reported epochs_run are exact)
+                keep = lambda a, b_: jnp.where(stopped, a, b_)
+                params = jax.tree.map(keep, params, p2)
+                opt = jax.tree.map(keep, opt, o2)
+                vl = val_loss_of(params)
+                improved = jnp.logical_and(~stopped,
+                                           vl < best_val - tc.min_delta)
+                best = jax.tree.map(
+                    lambda b_, p_: jnp.where(improved, p_, b_), best, params)
+                best_val = jnp.where(improved, vl, best_val)
+                bad = jnp.where(improved, 0, bad + 1)
+                active = ~stopped
+                stopped = jnp.logical_or(stopped, bad >= tc.patience)
+                losses = jnp.where(active, losses, jnp.nan)
+            else:
+                params, opt = p2, o2
+                vl = jnp.float32(jnp.nan)
+                active = jnp.bool_(True)
+            return (params, opt, best, best_val, bad, stopped), \
+                (losses, vl, active)
+
+        opt0 = _adam_init(params0)
+        carry0 = (params0, opt0, params0, jnp.float32(jnp.inf),
+                  jnp.int32(0), jnp.bool_(False))
+        carry, (tr_loss, vls, act) = jax.lax.scan(
+            epoch_body, carry0, (idx, w, gsteps))
+        params, _opt, best, best_val, _bad, _stopped = carry
+        out = best if early else params
+        return out, (tr_loss, vls, act)
+
+    return fit
+
+
 def fit_two_stage(cfg: models.TwoStageConfig, ds_train: AccelDataset,
                   tc: TrainConfig = TrainConfig(),
-                  log_every: int = 0) -> models.TwoStageParams:
-    params = models.init(jax.random.PRNGKey(tc.seed), cfg)
-    opt = _adam_init(params)
+                  log_every: int = 0, return_history: bool = False,
+                  ds_val: Optional[AccelDataset] = None):
+    """Train the two-stage model; returns params (and FitHistory if asked).
+
+    `backend="scan"` runs one jitted lax.scan over (epochs x steps) with a
+    donated carry; `backend="loop"` is the per-epoch reference loop. With
+    `tc.patience > 0`, a validation split (`ds_val`, or `tc.val_frac`
+    carved off the tail of `ds_train`) drives early stopping and the
+    best-val params snapshot is returned."""
+    n_total = ds_train.y.shape[0]
+    val_data = None
+    if tc.patience > 0:
+        if ds_val is None:
+            n_tr = max(int(n_total * (1.0 - tc.val_frac)), 1)
+            ds_train, ds_val = ds_train.split((n_tr + 0.5) / n_total)
+        val_data = _as_data(ds_val)
+    data = _as_data(ds_train)
+    if tc.data_parallel:
+        data = _shard_data(data)
     n = ds_train.y.shape[0]
-    bs = min(tc.batch_size, n)
-    steps = n // bs
 
-    data = {"adj": jnp.asarray(ds_train.adj), "x": jnp.asarray(ds_train.x),
-            "mask": jnp.asarray(ds_train.mask),
-            "unit_mask": jnp.asarray(ds_train.unit_mask),
-            "y": jnp.asarray(ds_train.y), "crit": jnp.asarray(ds_train.crit)}
+    params0 = models.init(jax.random.PRNGKey(tc.seed), cfg)
 
-    @jax.jit
-    def epoch(params, opt, perm):
-        def body(carry, idx):
-            params, opt = carry
-            batch = jax.tree.map(lambda a: a[idx], data)
-            (loss, parts), grads = jax.value_and_grad(
-                lambda p: models.losses(cfg, p, batch), has_aux=True)(params)
-            params, opt = _adam_update(params, grads, opt, tc.lr)
-            return (params, opt), loss
-        idxs = perm[:steps * bs].reshape(steps, bs)
-        (params, opt), losses_ = jax.lax.scan(body, (params, opt), idxs)
-        return params, opt, losses_.mean()
+    if tc.backend == "scan":
+        idx, w, dkey = _plan_for(tc, n, min(tc.batch_size, n))
+        fit = jax.jit(_build_scan_fit(cfg, tc, data, n, val_data),
+                      donate_argnums=(0,))
+        params, (tr_loss, vls, act) = fit(params0, idx, w, dkey)
+    elif tc.backend == "loop":
+        params, (tr_loss, vls, act) = _fit_loop(cfg, tc, data, n, val_data,
+                                                params0, log_every)
+    else:
+        raise ValueError(f"unknown backend {tc.backend!r}")
 
-    key = jax.random.PRNGKey(tc.seed + 1)
-    for ep in range(tc.epochs):
-        key, sub = jax.random.split(key)
-        perm = jax.random.permutation(sub, n)
-        params, opt, ml = epoch(params, opt, perm)
-        if log_every and (ep + 1) % log_every == 0:
-            print(f"  epoch {ep + 1}/{tc.epochs} loss={float(ml):.4f}")
+    tr_loss = np.asarray(tr_loss)
+    act = np.asarray(act)
+    if log_every and tc.backend == "scan":
+        for ep in range(tc.epochs):
+            if act[ep] and (ep + 1) % log_every == 0:
+                print(f"  epoch {ep + 1}/{tc.epochs} "
+                      f"loss={float(np.nanmean(tr_loss[ep])):.4f}")
+    if return_history:
+        hist = FitHistory(
+            train_loss=tr_loss,
+            val_loss=np.asarray(vls) if val_data is not None else None,
+            epochs_run=int(act.sum()))
+        return params, hist
     return params
 
 
+def _fit_loop(cfg, tc, data, n, val_data, params0, log_every):
+    """Reference per-epoch Python loop (same batch plan + key streams as
+    the scanned backend, so the two are parity-testable)."""
+    bs = min(tc.batch_size, n)
+    steps = -(-n // bs)
+    use_do = cfg.gnn.dropout > 0
+    step = _make_step(cfg, tc, data, use_do)
+    idx, w, dkey = _plan_for(tc, n, bs)
+
+    @jax.jit
+    def epoch(params, opt, idx_e, w_e, g_e):
+        def body(carry, one):
+            p, o = carry
+            i, wt, g = one
+            p, o, loss = step(p, o, i, wt, g, dkey)
+            return (p, o), loss
+        (params, opt), losses = jax.lax.scan(body, (params, opt),
+                                             (idx_e, w_e, g_e))
+        return params, opt, losses
+
+    @jax.jit
+    def val_loss_of(params):
+        return models.losses(cfg, params, val_data)[0]
+
+    params, opt = params0, _adam_init(params0)
+    best, best_val, bad = params, float("inf"), 0
+    tr_hist, val_hist, act_hist = [], [], []
+    epochs_run = tc.epochs
+    for ep in range(tc.epochs):
+        g_e = jnp.arange(ep * steps, (ep + 1) * steps, dtype=jnp.int32)
+        params, opt, losses = epoch(params, opt, idx[ep], w[ep], g_e)
+        tr_hist.append(np.asarray(losses))
+        act_hist.append(True)
+        if val_data is not None and tc.patience > 0:
+            vl = float(val_loss_of(params))
+            val_hist.append(vl)
+            if vl < best_val - tc.min_delta:
+                best, best_val, bad = params, vl, 0
+            else:
+                bad += 1
+            if bad >= tc.patience:
+                epochs_run = ep + 1
+                break
+        else:
+            val_hist.append(float("nan"))
+        if log_every and (ep + 1) % log_every == 0:
+            print(f"  epoch {ep + 1}/{tc.epochs} "
+                  f"loss={float(losses.mean()):.4f}")
+    pad_eps = tc.epochs - len(tr_hist)
+    tr = np.concatenate([np.stack(tr_hist),
+                         np.full((pad_eps, steps), np.nan)]) \
+        if pad_eps else np.stack(tr_hist)
+    vl_arr = np.concatenate([np.asarray(val_hist, np.float32),
+                             np.full((pad_eps,), np.nan, np.float32)])
+    act = np.concatenate([np.ones(len(tr_hist), bool),
+                          np.zeros(pad_eps, bool)])
+    out = best if (val_data is not None and tc.patience > 0) else params
+    return out, (tr, vl_arr, act)
+
+
+# --------------------------------------------------------------------------
+# ensemble training (vmapped whole runs)
+# --------------------------------------------------------------------------
+
+def fit_ensemble(cfg: models.TwoStageConfig, ds_train: AccelDataset,
+                 tc: TrainConfig = TrainConfig(), n_members: int = 8,
+                 archs: Optional[Sequence[str]] = None,
+                 ds_val: Optional[AccelDataset] = None
+                 ) -> Tuple[EnsembleParams, Dict[str, np.ndarray]]:
+    """Train `n_members` independent models as vmapped scanned runs.
+
+    Member m uses seed `tc.seed + m` for BOTH init and its batch/dropout
+    key stream, so member m is bit-compatible with a single
+    `fit_two_stage(..., TrainConfig(seed=tc.seed + m))` run (asserted in
+    tests/test_training.py). `archs` optionally assigns each member a GNN
+    architecture from {gcn, gsae, gat, mpnn}; members are grouped per arch
+    (param pytrees differ across archs) and each group trains under one
+    `jax.vmap` over the member axis.
+
+    Returns (EnsembleParams, history dict with per-member (M, E, S) train
+    losses and (M,) epochs_run)."""
+    if n_members < 1:
+        raise ValueError("n_members must be >= 1")
+    member_arch = list(archs) if archs else [cfg.gnn.arch] * n_members
+    if len(member_arch) != n_members:
+        raise ValueError("len(archs) must equal n_members")
+
+    n_total = ds_train.y.shape[0]
+    val_data = None
+    if tc.patience > 0:
+        if ds_val is None:
+            n_tr = max(int(n_total * (1.0 - tc.val_frac)), 1)
+            ds_train, ds_val = ds_train.split((n_tr + 0.5) / n_total)
+        val_data = _as_data(ds_val)
+    data = _as_data(ds_train)
+    if tc.data_parallel:
+        data = _shard_data(data)
+    n = ds_train.y.shape[0]
+
+    groups: List[Tuple[models.TwoStageConfig, models.TwoStageParams]] = []
+    hist_tr, hist_eps = [], []
+    order: List[str] = []
+    bs = min(tc.batch_size, n)
+    for arch in dict.fromkeys(member_arch):          # stable unique order
+        members = [m for m, a in enumerate(member_arch) if a == arch]
+        g_cfg = replace(cfg, gnn=replace(cfg.gnn, arch=arch))
+        init_keys = jnp.stack(
+            [jax.random.PRNGKey(tc.seed + m) for m in members])
+        params0 = jax.vmap(lambda k: models.init(k, g_cfg))(init_keys)
+        # per-member batch plans + dropout keys, derived exactly as a
+        # single fit with seed tc.seed + m would (member == single parity)
+        plans = [_plan_for(replace(tc, seed=tc.seed + m), n, bs)
+                 for m in members]
+        idx = jnp.stack([p[0] for p in plans])
+        w = jnp.stack([p[1] for p in plans])
+        dkeys = jnp.stack([p[2] for p in plans])
+        if not tc.data_parallel:
+            # member sharding and batch-axis data sharding commit arrays
+            # to different meshes (members use a devs[:k] prefix, data
+            # the full device set) and jit rejects the mix — when the
+            # caller asked for data_parallel, that mesh wins
+            params0, idx, w, dkeys = _shard_members(
+                (params0, idx, w, dkeys), len(members))
+        fit = _build_scan_fit(g_cfg, tc, data, n, val_data)
+        fitted = jax.jit(jax.vmap(fit), donate_argnums=(0,))
+        params, (tr_loss, _vls, act) = fitted(params0, idx, w, dkeys)
+        groups.append((g_cfg, params))
+        hist_tr.append(np.asarray(tr_loss))
+        hist_eps.append(np.asarray(act).sum(-1))
+        order.extend([arch] * len(members))
+
+    history = {"train_loss": np.concatenate(hist_tr, 0),
+               "epochs_run": np.concatenate(hist_eps, 0)}
+    return EnsembleParams(groups=groups, member_arch=order), history
+
+
+def ensemble_predict(ens: EnsembleParams, adj, x, mask
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """All-member predictions: (mean (B,4), std (B,4), stacked (M,B,4)).
+
+    Deterministic — no rng reaches `models.predict`, so dropout is off at
+    inference exactly as in `evaluate`."""
+    adj, x, mask = jnp.asarray(adj), jnp.asarray(x), jnp.asarray(mask)
+    ys = []
+    for g_cfg, params in ens.groups:
+        y = jax.vmap(
+            lambda p: models.predict(g_cfg, p, adj, x, mask)[0])(params)
+        ys.append(y)
+    Y = jnp.concatenate(ys, axis=0)
+    return Y.mean(0), Y.std(0), Y
+
+
+def evaluate_ensemble(ens: EnsembleParams, ds: AccelDataset,
+                      ds_test: AccelDataset) -> Dict[str, Dict]:
+    """`evaluate` on the ensemble-mean prediction + per-target mean std
+    (denormalized), the uncertainty column the DSE acquisition path sees."""
+    adj, x, mask = (jnp.asarray(ds_test.adj), jnp.asarray(ds_test.x),
+                    jnp.asarray(ds_test.mask))
+    mean, std, _ = ensemble_predict(ens, adj, x, mask)
+    y_pred = ds.denorm_y(np.asarray(mean))
+    std_dn = np.asarray(std) * np.asarray(ds.y_std)
+    y_true = ds_test.y_raw
+    out: Dict[str, Dict] = {}
+    for i, t in enumerate(models.TARGETS):
+        out[t] = {"r2": r2_score(y_true[:, i], y_pred[:, i]),
+                  "mape": mape(y_true[:, i], y_pred[:, i]),
+                  "mean_std": float(std_dn[:, i].mean())}
+    crit_probs = jnp.concatenate([
+        jax.nn.sigmoid(jax.vmap(
+            lambda p, g_cfg=g_cfg: models.predict_critical(
+                g_cfg, p, adj, x, mask))(params))
+        for g_cfg, params in ens.groups], axis=0)      # (M, B, N)
+    pred_bits = (crit_probs.mean(0) > 0.5)
+    um = ds_test.unit_mask > 0
+    correct = np.asarray(pred_bits) == (ds_test.crit > 0.5)
+    out["critical_path"] = {
+        "accuracy": float(correct[um].mean()) if um.any() else 1.0}
+    return out
+
+
+# --------------------------------------------------------------------------
+# evaluation / metrics
+# --------------------------------------------------------------------------
+
 def evaluate(cfg: models.TwoStageConfig, params: models.TwoStageParams,
              ds: AccelDataset, ds_test: AccelDataset) -> Dict[str, Dict]:
-    """R2 + MAPE per target (denormalized), + critical-path accuracy."""
+    """R2 + MAPE per target (denormalized), + critical-path accuracy.
+
+    Never passes rng: evaluation/prediction is deterministic regardless of
+    `cfg.gnn.dropout`."""
     y_pred, crit_logits = models.predict(
         cfg, params, jnp.asarray(ds_test.adj), jnp.asarray(ds_test.x),
         jnp.asarray(ds_test.mask))

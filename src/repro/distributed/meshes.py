@@ -82,13 +82,29 @@ def maybe(mesh: Mesh, dim: int, name) -> Optional[Any]:
     return None
 
 
+# Flat (n_heads*head_dim)-style logical dims. Sharding one of these is only
+# safe when every device slice covers WHOLE heads: if the shard boundary
+# falls inside a head, the rotary embedding's half-split (slice + concat on
+# the head_dim axis of the reshaped (…, H, D) tensor) is miscompiled by the
+# XLA SPMD partitioner (observed on jax 0.4.37 CPU: k values off by O(1)
+# and einsum reductions inflated by exactly the model-axis size — see
+# tests/test_sharding.py::test_flat_head_sharding_alignment for the
+# minimal reproducer). `spec_for(..., head_dim=…)` therefore falls back to
+# replication when (dim // axis_size) % head_dim != 0.
+HEAD_FLAT_AXES = ("heads", "heads_flat", "kv", "kv_flat")
+
+
 def spec_for(mesh: Mesh, shape: Tuple[int, ...], axes: Tuple,
-             rules: Dict[str, Any] = BASE_RULES) -> P:
+             rules: Dict[str, Any] = BASE_RULES,
+             head_dim: Optional[int] = None) -> P:
     used = set()
     out = []
     for dim, logical in zip(shape, axes):
         want = rules.get(logical) if logical else None
         got = maybe(mesh, dim, want)
+        if (got is not None and head_dim and logical in HEAD_FLAT_AXES
+                and (dim // axis_size(mesh, got)) % head_dim != 0):
+            got = None          # shard would split a head: replicate
         if got is not None:
             flat = got if isinstance(got, tuple) else (got,)
             if any(a in used for a in flat):
@@ -100,10 +116,12 @@ def spec_for(mesh: Mesh, shape: Tuple[int, ...], axes: Tuple,
 
 
 def param_shardings(mesh: Mesh, logical_tree, shape_tree,
-                    rules: Dict[str, Any] = BASE_RULES):
+                    rules: Dict[str, Any] = BASE_RULES,
+                    head_dim: Optional[int] = None):
     """Map ParamTable.logical_axes() + shapes() -> NamedSharding pytree."""
     def one(axes, sds):
-        return NamedSharding(mesh, spec_for(mesh, sds.shape, axes, rules))
+        return NamedSharding(mesh, spec_for(mesh, sds.shape, axes, rules,
+                                            head_dim=head_dim))
     return jax.tree.map(one, logical_tree, shape_tree,
                         is_leaf=lambda x: isinstance(x, tuple))
 
@@ -158,3 +176,14 @@ def cache_shardings(mesh: Mesh, cache_tree):
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def data_parallel_mesh(min_devices: int = 1) -> Optional[Mesh]:
+    """1-D ("data",) mesh over all local devices, for batch-axis sharding
+    of the GNN training path (repro.core.training). Returns None when
+    fewer than `min_devices` devices exist — callers then skip sharding.
+    """
+    devs = jax.devices()
+    if len(devs) < min_devices:
+        return None
+    return Mesh(np.asarray(devs), ("data",))

@@ -158,6 +158,26 @@ def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, int]:
     return dict(mult)
 
 
+# '%' optional like the instruction/header regexes: some HLO printers
+# omit the sigil, and a miss here silently zeroes flops/bytes
+_OPERAND_RE = re.compile(
+    r"(?:([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+)?%?([\w.\-]+)")
+
+
+def _operands(instr: Instr) -> List[Tuple[str, str]]:
+    """[(name, inline_type_or_"")] for the instruction's call operands.
+
+    HLO long form writes operands WITH their types —
+    ``dot(f32[64,128]{1,0} %Arg_0.1, f32[128,32]{1,0} %Arg_1.2)`` — so a
+    plain split(",") breaks on the commas inside the shape brackets (the
+    old parser looked up "f32[64" in the symbol table, got nothing, and
+    silently dropped the contraction factor / operand bytes)."""
+    m = re.search(rf"\b{re.escape(instr.op)}\(([^)]*)\)", instr.line)
+    if not m:
+        return []
+    return [(nm, ty or "") for ty, nm in _OPERAND_RE.findall(m.group(1))]
+
+
 def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
     out_elems = 1
     shapes = _parse_shapes(instr.result_type)
@@ -165,13 +185,11 @@ def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
         return 0.0
     for d in shapes[0][1]:
         out_elems *= d
-    # lhs operand name = first arg in parens
-    m = re.search(rf"{instr.op}\(([^)]*)\)", instr.line)
-    if not m:
+    ops = _operands(instr)
+    if not ops:
         return 0.0
-    args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
-    lhs_type = symtab.get(args[0], "")
-    lhs_shapes = _parse_shapes(lhs_type)
+    lhs_name, lhs_inline = ops[0]
+    lhs_shapes = _parse_shapes(lhs_inline or symtab.get(lhs_name, ""))
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
     contract = 1
     if cm and lhs_shapes:
@@ -207,11 +225,8 @@ def analyze(text: str) -> Dict:
             if ins.op not in _SKIP_BYTES:
                 rb = _bytes_of(ins.result_type)
                 ob = 0
-                am = re.search(rf"{ins.op}\(([^)]*)\)", ins.line)
-                if am:
-                    for a in am.group(1).split(","):
-                        ob += _bytes_of(comp.symtab.get(
-                            a.strip().lstrip("%"), ""))
+                for nm, ty in _operands(ins):
+                    ob += _bytes_of(ty or comp.symtab.get(nm, ""))
                 hbm_bytes += m * (rb + ob)
             if ins.op in _COLLECTIVES:
                 g = _group_size(ins.line)

@@ -214,8 +214,10 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
 
     if shape.kind == "train":
         pshapes = table.shapes()
-        psh = M.param_shardings(mesh, logical, pshapes, storage)
-        csh = (M.param_shardings(mesh, logical, pshapes, compute)
+        hd = cfg.resolved_head_dim
+        psh = M.param_shardings(mesh, logical, pshapes, storage, head_dim=hd)
+        csh = (M.param_shardings(mesh, logical, pshapes, compute,
+                                 head_dim=hd)
                if compute else None)
         opt_shapes = adamw.AdamWState(
             step=jax.ShapeDtypeStruct((), jnp.int32),
@@ -230,7 +232,8 @@ def plan(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
     table, pshapes = serve_param_specs(cfg)
     # serving has no optimizer state: store params directly in the compute
     # (TP) sharding when the preset provides one — kills per-step gathers.
-    psh = M.param_shardings(mesh, logical, pshapes, compute or storage)
+    psh = M.param_shardings(mesh, logical, pshapes, compute or storage,
+                            head_dim=cfg.resolved_head_dim)
     if shape.kind == "prefill":
         step_fn = make_prefill_step(cfg)
         cspec = decoding.cache_spec(cfg, shape)

@@ -36,7 +36,8 @@ def build_state(cfg, mesh, rules=None):
     table = transformer.build_param_table(cfg)
     logical = table.logical_axes()
     pshapes = table.shapes()
-    psh = M.param_shardings(mesh, logical, pshapes, rules or M.BASE_RULES)
+    psh = M.param_shardings(mesh, logical, pshapes, rules or M.BASE_RULES,
+                            head_dim=cfg.resolved_head_dim)
     with mesh:
         params = jax.jit(table.init, out_shardings=psh)(
             jax.random.PRNGKey(0))

@@ -21,9 +21,9 @@ from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import rwkv as rwkv_lib
 from repro.models import ssm as ssm_lib
-from repro.models.layers import (ParamTable, activation, apply_rope, head_axis,
-                                 rms_norm, rope_angles, sinusoidal_at,
-                                 sinusoidal_positions)
+from repro.models.layers import (ParamTable, activation, apply_rope, fdot,
+                                 head_axis, rms_norm, rope_angles,
+                                 sinusoidal_at, sinusoidal_positions)
 
 MOE_AUX_WEIGHT = 0.01
 
@@ -134,9 +134,9 @@ def build_param_table(cfg: ArchConfig) -> ParamTable:
 def _project_qkv(cfg, p, x, prefix=""):
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = fdot(x, p["wq"])
+    k = fdot(x, p["wk"])
+    v = fdot(x, p["wv"])
     if cfg.qkv_bias and "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     return (q.reshape(B, S, cfg.n_heads, hd),
@@ -146,7 +146,7 @@ def _project_qkv(cfg, p, x, prefix=""):
 
 def _mlp(cfg, p, x):
     act = activation(cfg.act)
-    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return fdot(act(fdot(x, p["w_gate"])) * fdot(x, p["w_up"]), p["w_down"])
 
 
 def _attn_block(cfg, p, x, positions, *, causal=True, is_global=None):
@@ -163,7 +163,7 @@ def _attn_block(cfg, p, x, positions, *, causal=True, is_global=None):
         v = _cp_constrain(v, (None, None, None))
     o = attn_lib.attention(q, k, v, causal=causal, window=cfg.swa_window,
                            chunk=cfg.attn_chunk, is_global=is_global)
-    return o.reshape(*x.shape[:2], -1) @ p["wo"], (k, v)
+    return fdot(o.reshape(*x.shape[:2], -1), p["wo"]), (k, v)
 
 
 def block_fwd(cfg: ArchConfig, p: Dict[str, Any], x: jax.Array,
@@ -187,12 +187,12 @@ def block_fwd(cfg: ArchConfig, p: Dict[str, Any], x: jax.Array,
         nx = rms_norm(x, p["norm3"], cfg.norm_eps)
         B, Se, _ = enc_out.shape
         hd = cfg.resolved_head_dim
-        q = (nx @ p["xattn"]["wq"]).reshape(
+        q = fdot(nx, p["xattn"]["wq"]).reshape(
             x.shape[0], x.shape[1], cfg.n_heads, hd)
-        kx = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
-        vx = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        kx = fdot(enc_out, p["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+        vx = fdot(enc_out, p["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
         o = attn_lib.attention(q, kx, vx, causal=False, chunk=cfg.attn_chunk)
-        x = x + o.reshape(*x.shape[:2], -1) @ p["xattn"]["wo"]
+        x = x + fdot(o.reshape(*x.shape[:2], -1), p["xattn"]["wo"])
     nx = rms_norm(x, p["norm2"], cfg.norm_eps)
     if cfg.is_moe:
         m_out, aux = moe_lib.moe_ffn(cfg, p["moe"], nx)
@@ -323,7 +323,7 @@ def forward(cfg: ArchConfig, params, batch, kind="train"):
         return x, aux, (kvs, enc_out)
     head = (params["embed"]["tokens"].T if cfg.tie_embeddings
             else params["head"]["w"])
-    logits = x @ head.astype(x.dtype)
+    logits = fdot(x, head.astype(x.dtype))
     return logits, aux, (kvs, enc_out)
 
 
@@ -347,7 +347,8 @@ def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jax.Array, Dict]:
 
     @jax.checkpoint
     def chunk_nll(h_chunk, l_chunk):
-        logits = (h_chunk @ head).astype(jnp.float32)
+        logits = jnp.matmul(h_chunk, head,
+                            preferred_element_type=jnp.float32)
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, l_chunk[..., None], axis=-1)[..., 0]
         mask = (l_chunk >= 0).astype(jnp.float32)

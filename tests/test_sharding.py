@@ -100,6 +100,12 @@ _TP_SCRIPT = textwrap.dedent("""
                              out_shardings=out_sh)
             _, _, m = jitted(params, opt, pipe.batch_at(0))
             losses[name] = float(m["loss"])
+    # Presets are bit-identical on this host since (a) partitionable
+    # threefry made param init sharding-invariant (repro/__init__.py) and
+    # (b) head-aligned flat sharding avoids the XLA rope miscompile
+    # (meshes.spec_for head_dim fallback). The 5e-3 slack is retained only
+    # for cross-platform fusion/rounding differences, NOT for layout
+    # drift: values well above float noise mean a real regression.
     assert abs(losses["baseline"] - losses[preset]) < 5e-3, losses
     print(json.dumps({"ok": True, **losses}))
 """)
@@ -111,6 +117,80 @@ def test_perf_presets_match_baseline(preset):
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
     r = subprocess.run([sys.executable, "-c", _TP_SCRIPT, preset],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert json.loads(r.stdout.strip().splitlines()[-1])["ok"]
+
+
+_ALIGN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import meshes as M
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    # kv_flat=32 over model(4): 8 cols/device splits head_dim=16 -> replicate
+    s = M.spec_for(mesh, (64, 32), ("embed", "kv_flat"), M.BASE_RULES,
+                   head_dim=16)
+    assert s == P("data", None), s
+    # heads_flat=64 over model(4): 16 cols/device = whole heads -> shard
+    s = M.spec_for(mesh, (64, 64), ("embed", "heads_flat"), M.BASE_RULES,
+                   head_dim=16)
+    assert s == P("data", "model"), s
+    # no head_dim metadata: plain divisibility behavior is unchanged
+    s = M.spec_for(mesh, (64, 32), ("embed", "kv_flat"), M.BASE_RULES)
+    assert s == P("data", "model"), s
+
+    # Value-level regression for the layout that spec_for now emits: a
+    # rope-style half-split on (B,S,H,D) tensors built from flat-sharded
+    # projections must match the fully-replicated computation. (With the
+    # shard boundary INSIDE a head, jax 0.4.37's CPU partitioner
+    # miscompiled this: k off by O(1), reductions inflated by the
+    # model-axis size — which is why spec_for falls back to replication.)
+    B, S, D = 4, 8, 16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((B, S, 64)), jnp.bfloat16)
+    W = jnp.asarray(rng.standard_normal((64, 64)) * 0.1, jnp.bfloat16)
+    ang = jnp.asarray(rng.standard_normal((B, S, D // 2)), jnp.float32)
+
+    def rope(x):
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        x1, x2 = x[..., :D // 2], x[..., D // 2:]
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+        return jnp.concatenate([x1 * cos - x2 * sin,
+                                x2 * cos + x1 * sin], -1).astype(dt)
+
+    def f(x, W, spec):
+        Wc = jax.lax.with_sharding_constraint(W, NamedSharding(mesh, spec))
+        q = jnp.matmul(x, Wc,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        q = rope(q.reshape(B, S, 4, D))
+        s = jnp.einsum("bqhd,bshd->bhqs", q, q,
+                       preferred_element_type=jnp.float32)
+        return s.sum(), q
+
+    with mesh:
+        spec = M.spec_for(mesh, W.shape, ("embed", "heads_flat"),
+                          M.BASE_RULES, head_dim=D)
+        t_ref, q_ref = jax.jit(lambda x, W: f(x, W, P(None, None)))(x, W)
+        t_sh, q_sh = jax.jit(lambda x, W: f(x, W, spec))(x, W)
+        np.testing.assert_allclose(np.asarray(q_sh, np.float32),
+                                   np.asarray(q_ref, np.float32),
+                                   atol=1e-2)
+        assert abs(float(t_sh) - float(t_ref)) < 1.0, (t_sh, t_ref)
+    print(json.dumps({"ok": True}))
+""")
+
+
+def test_flat_head_sharding_alignment():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", _ALIGN_SCRIPT],
                        capture_output=True, text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
     assert json.loads(r.stdout.strip().splitlines()[-1])["ok"]
