@@ -7,7 +7,9 @@ Sections: tables (II,III,VIII), models (V,VI,VII,fig5), dse (IV,fig4,fig6),
 kernels, lm, roofline, bridge, engine (batched-vs-naive surrogate
 throughput, see benchmarks/engine_bench.py), dataset (batched-vs-loop
 labeling throughput, see benchmarks/dataset_bench.py), train (vmapped
-ensemble vs sequential loop fits, see benchmarks/train_bench.py).
+ensemble vs sequential loop fits, see benchmarks/train_bench.py),
+pipeline (staged cold vs cached-resume + unified-vs-per-app surrogate
+fits, see benchmarks/pipeline_bench.py).
 """
 from __future__ import annotations
 
@@ -38,7 +40,7 @@ def main() -> None:
                     help="smaller datasets/epochs")
     ap.add_argument("--sections", default="tables,models,dse,kernels,lm,"
                                           "roofline,bridge,engine,dataset,"
-                                          "train")
+                                          "train,pipeline")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as T
@@ -79,6 +81,9 @@ def main() -> None:
     if "train" in sections:
         from benchmarks import train_bench
         _run_gated_bench("train_bench", train_bench.main, args.quick)
+    if "pipeline" in sections:
+        from benchmarks import pipeline_bench
+        _run_gated_bench("pipeline_bench", pipeline_bench.main, args.quick)
     print(f"# total benchmark time: {time.time() - t0:.1f}s")
 
 

@@ -18,11 +18,18 @@ def main():
                     choices=["sobel", "gaussian", "kmeans", "dct8", "fir15"])
     ap.add_argument("--paper", action="store_true",
                     help="paper-faithful scale (slow: 55k-105k samples)")
+    ap.add_argument("--artifact-dir", default=None,
+                    help="on-disk artifact cache: rerunning with the same "
+                         "config resumes from cached dataset/params "
+                         "(docs/pipeline_stages.md)")
     args = ap.parse_args()
 
     cfg = (P.PipelineConfig.paper_faithful(args.app) if args.paper
            else P.PipelineConfig(app=args.app, n_samples=800, epochs=30,
                                  dse_budget=1500, hidden=96, n_layers=4))
+    if args.artifact_dir:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, artifact_dir=args.artifact_dir)
     print(f"== ApproxPilot on {args.app} ==")
     res = P.run(cfg, verbose=True)
 
@@ -30,9 +37,13 @@ def main():
     print(f"  {res.space}")
     print("\n-- surrogate quality (Table V analog) --")
     for k, v in res.metrics.items():
-        if k in ("engine", "dse_history"):
+        if k in ("engine", "dse_history", "store"):
             continue
         print(f"  {k}: " + ", ".join(f"{m}={x:.3f}" for m, x in v.items()))
+    st = res.metrics.get("store", {})
+    if st:
+        print("\n-- artifact store (stage cache) --")
+        print(f"  hits={st.get('hits', {})} misses={st.get('misses', {})}")
     hist = res.metrics.get("dse_history", [])
     if hist:
         h0, h1 = hist[0], hist[-1]

@@ -1,0 +1,191 @@
+"""Content-addressed artifact store for the staged pipeline.
+
+The ApproxPilot flow (Fig. 1) produces a chain of expensive artifacts —
+pruned library, labeled dataset, trained surrogate params, inference
+engine, Pareto front — and the monolithic `pipeline.run()` used to rebuild
+every one of them on every invocation. This module gives each stage a
+content-addressed cache slot:
+
+* **Keys** are a stable hash of the *governing config slice*: the stage
+  name plus exactly the fields of `PipelineConfig` (and upstream keys)
+  that determine the stage's output. Two runs that differ only in, say,
+  ``dse_budget`` share the dataset and training artifacts; changing
+  ``n_samples`` invalidates the dataset key and everything downstream.
+* **Disk tier** (`root` given): picklable artifacts (datasets, trained
+  params, DSE results) persist under ``<root>/<key>.pkl`` and survive the
+  process — a resumed sweep or a `validate_pareto` call in a later
+  session reuses them.
+* **Memory tier** (always on): every artifact, including unpicklable ones
+  (the `SurrogateEngine` holds jitted closures), is memoized in-process.
+  A store with ``root=None`` is memory-only.
+* **Stats** (`StoreStats`): per-stage hit/miss counters, asserted by the
+  cache-resume tests and surfaced in ``PipelineResult.metrics["store"]``.
+
+JAX pytree leaves are converted to numpy before hitting the disk tier
+(`_to_numpy_tree`), so cached params are device-independent; consumers
+(`models.predict`, the engine) re-device them lazily via `jnp.asarray`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import tempfile
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+def _canonical(obj: Any) -> Any:
+    """Reduce an object to a deterministic, JSON-serializable structure."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {"__dc__": type(obj).__name__,
+                **{f.name: _canonical(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj)}}
+    if isinstance(obj, dict):
+        return {str(k): _canonical(v) for k, v in sorted(obj.items(),
+                                                         key=lambda kv:
+                                                         str(kv[0]))}
+    if isinstance(obj, (list, tuple)):
+        return [_canonical(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    if hasattr(obj, "item"):                     # numpy / jax scalars
+        return obj.item()
+    # refuse rather than fall back to repr(): default reprs embed memory
+    # addresses, which would silently give every process a different key
+    # (a cache that never hits across runs)
+    raise TypeError(
+        f"cache-key spec contains a non-canonicalizable value of type "
+        f"{type(obj).__name__}: {obj!r}")
+
+
+def stable_hash(obj: Any, n_hex: int = 16) -> str:
+    """Deterministic content hash of a (nested) config structure."""
+    blob = json.dumps(_canonical(obj), sort_keys=True,
+                      separators=(",", ":")).encode()
+    return hashlib.sha256(blob).hexdigest()[:n_hex]
+
+
+@dataclass
+class StoreStats:
+    """Per-stage cache counters (`hits[stage]`, `misses[stage]`) plus the
+    ordered event log the cache-resume tests assert on."""
+    hits: Dict[str, int] = field(default_factory=dict)
+    misses: Dict[str, int] = field(default_factory=dict)
+    events: list = field(default_factory=list)   # (stage, "hit"|"miss", key)
+
+    def record(self, stage: str, hit: bool, key: str) -> None:
+        d = self.hits if hit else self.misses
+        d[stage] = d.get(stage, 0) + 1
+        self.events.append((stage, "hit" if hit else "miss", key))
+
+    def as_dict(self) -> Dict[str, Dict[str, int]]:
+        return {"hits": dict(self.hits), "misses": dict(self.misses)}
+
+
+def _to_numpy_tree(obj: Any) -> Any:
+    """jax.Array leaves -> numpy (device-independent pickles)."""
+    import jax
+    import numpy as np
+
+    def one(x):
+        return np.asarray(x) if isinstance(x, jax.Array) else x
+    try:
+        return jax.tree.map(one, obj)
+    except Exception:                            # non-pytree artifact
+        return obj
+
+
+class ArtifactStore:
+    """Two-tier (memory + optional disk) content-addressed artifact cache.
+
+    >>> store = ArtifactStore("/tmp/approxpilot-cache")
+    >>> key = store.key("dataset", {"app": "sobel", "n_samples": 500})
+    >>> ds = store.get_or_build("dataset", key, lambda: expensive_build())
+
+    ``get_or_build`` is the only entry point the pipeline stages use; the
+    lower-level ``get``/``put``/``has`` are exposed for tools and tests.
+    """
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = Path(root) if root is not None else None
+        if self.root is not None:
+            self.root.mkdir(parents=True, exist_ok=True)
+        self._memory: Dict[str, Any] = {}
+        self.stats = StoreStats()
+
+    # -- keys --------------------------------------------------------------
+
+    @staticmethod
+    def key(stage: str, spec: Any) -> str:
+        """``<stage>-<hash(spec)>``: readable prefix, content-hashed body."""
+        return f"{stage}-{stable_hash(spec)}"
+
+    # -- low-level ---------------------------------------------------------
+
+    def _path(self, key: str) -> Optional[Path]:
+        return self.root / f"{key}.pkl" if self.root is not None else None
+
+    def has(self, key: str) -> bool:
+        if key in self._memory:
+            return True
+        p = self._path(key)
+        return p is not None and p.exists()
+
+    def get(self, key: str) -> Any:
+        if key in self._memory:
+            return self._memory[key]
+        p = self._path(key)
+        if p is not None and p.exists():
+            with open(p, "rb") as f:
+                obj = pickle.load(f)
+            self._memory[key] = obj
+            return obj
+        raise KeyError(key)
+
+    def put(self, key: str, obj: Any, *, memory_only: bool = False) -> Any:
+        self._memory[key] = obj
+        p = self._path(key)
+        if p is not None and not memory_only:
+            disk_obj = _to_numpy_tree(obj)
+            # atomic write: a crashed run must not leave a torn pickle
+            fd, tmp = tempfile.mkstemp(dir=str(self.root),
+                                       prefix=f".{key}.")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    pickle.dump(disk_obj, f, protocol=4)
+                os.replace(tmp, p)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+        return obj
+
+    def evict(self, key: str) -> None:
+        self._memory.pop(key, None)
+        p = self._path(key)
+        if p is not None and p.exists():
+            p.unlink()
+
+    def keys(self) -> Tuple[str, ...]:
+        disk = ()
+        if self.root is not None:
+            disk = tuple(p.stem for p in self.root.glob("*.pkl"))
+        return tuple(sorted(set(self._memory) | set(disk)))
+
+    # -- the stage entry point --------------------------------------------
+
+    def get_or_build(self, stage: str, key: str, build: Callable[[], Any],
+                     *, memory_only: bool = False) -> Any:
+        """Return the cached artifact for ``key``, or build+cache it.
+
+        ``memory_only`` keeps unpicklable artifacts (jitted engines) out of
+        the disk tier while still memoizing them in-process."""
+        if self.has(key):
+            self.stats.record(stage, True, key)
+            return self.get(key)
+        self.stats.record(stage, False, key)
+        return self.put(key, build(), memory_only=memory_only)

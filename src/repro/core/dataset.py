@@ -60,6 +60,31 @@ class AccelDataset:
     x_mean: np.ndarray
     x_std: np.ndarray
 
+    # Every config of one accelerator shares graph topology, so adj /
+    # mask / unit_mask are (usually) B identical rows; persisting all B
+    # would dominate the artifact-store pickle at paper scale (55k-105k
+    # samples). Collapse constant-row tensors to one row + count on
+    # pickle and rebroadcast on load; the transient featurizer cache
+    # (`featurizer_for`) is rebuildable and is dropped.
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state.pop("_featurizers", None)
+        for k in ("adj", "mask", "unit_mask"):
+            v = state[k]
+            if isinstance(v, np.ndarray) and v.shape[0] > 1 and \
+                    (v == v[:1]).all():
+                state[k] = ("__const_rows__", np.ascontiguousarray(v[0]),
+                            v.shape[0])
+        return state
+
+    def __setstate__(self, state):
+        for k, v in state.items():
+            if isinstance(v, tuple) and len(v) == 3 and \
+                    v[0] == "__const_rows__":
+                state[k] = np.broadcast_to(
+                    v[1], (v[2],) + v[1].shape).copy()
+        self.__dict__.update(state)
+
     def split(self, frac: float = 0.9):
         n = int(len(self.y) * frac)
         tr = dataclasses.replace(
@@ -79,6 +104,129 @@ class AccelDataset:
     def flat_features(self) -> np.ndarray:
         B = self.x.shape[0]
         return (self.x[..., :8] * self.mask[..., None]).reshape(B, -1)
+
+
+@dataclass
+class MergedDataset:
+    """Union of per-app datasets on a common pad width, for the cross-app
+    unified surrogate.
+
+    Feature rows are each app's *own-normalized* features (per-app x
+    stats: standardized columns are scale-free across apps) with the
+    one-hot app-identity block of `graph.APP_VOCAB` appended — so the
+    feature dim is ``graph.MERGED_FEATURE_DIM`` for ANY app subset and
+    leave-one-app-out training keeps identical parameter shapes. Targets
+    stay normalized per app (per-app y stats are the bookkeeping needed to
+    denormalize a prediction for its app — `denorm_rows` / the engine's
+    per-app views). Rows are shuffled at merge time so `split` produces
+    app-mixed train/test sets; `app_ids` tracks provenance.
+
+    Exposes the same tensor attributes as `AccelDataset` (adj, x, mask,
+    unit_mask, y, y_raw, crit) plus `split`, so `training.fit_two_stage`
+    consumes it unchanged.
+    """
+    app_names: Tuple[str, ...]
+    adj: np.ndarray          # (B,N,N) normalized, N = common n_pad
+    x: np.ndarray            # (B,N,MERGED_FEATURE_DIM) crit bit zeroed
+    mask: np.ndarray         # (B,N)
+    unit_mask: np.ndarray    # (B,N)
+    y: np.ndarray            # (B,4) per-app normalized
+    y_raw: np.ndarray        # (B,4)
+    crit: np.ndarray         # (B,N)
+    app_ids: np.ndarray      # (B,) index into app_names
+    configs: List[Tuple[int, ...]]
+    per_app: Dict[str, "AccelDataset"]
+
+    _ROW_FIELDS = ("adj", "x", "mask", "unit_mask", "y", "y_raw", "crit",
+                   "app_ids")
+
+    def _take(self, sel) -> "MergedDataset":
+        """Row-restriction by slice or boolean mask — the ONE place the
+        per-row fields are enumerated (split/view stay in sync)."""
+        kw = {k: getattr(self, k)[sel] for k in self._ROW_FIELDS}
+        if isinstance(sel, slice):
+            kw["configs"] = self.configs[sel]
+        else:
+            kw["configs"] = [c for c, keep in zip(self.configs, sel)
+                             if keep]
+        return dataclasses.replace(self, **kw)
+
+    def split(self, frac: float = 0.9):
+        n = int(len(self.y) * frac)
+        return self._take(slice(None, n)), self._take(slice(n, None))
+
+    def view(self, app_name: str) -> "MergedDataset":
+        """Row-restriction to one app (per-app evaluation / fine-tuning)."""
+        return self._take(self.app_ids == self.app_names.index(app_name))
+
+    def denorm_rows(self, y: np.ndarray,
+                    app_ids: Optional[np.ndarray] = None) -> np.ndarray:
+        """Denormalize per row with each row's own app stats."""
+        ids = self.app_ids if app_ids is None else app_ids
+        mean = np.stack([self.per_app[a].y_mean for a in self.app_names])
+        std = np.stack([self.per_app[a].y_std for a in self.app_names])
+        return y * std[ids] + mean[ids]
+
+    @property
+    def n_pad(self) -> int:
+        return self.x.shape[1]
+
+
+def _pad_nodes(a: np.ndarray, n_pad: int, is_adj: bool = False
+               ) -> np.ndarray:
+    """Zero-pad the node axis (axis 1, and axis 2 when ``is_adj``) to
+    n_pad. The adjacency case is an explicit flag: shape sniffing would
+    misread a (B, N, F) feature tensor with N == F."""
+    n = a.shape[1]
+    if n == n_pad:
+        return a
+    if n > n_pad:
+        raise ValueError(f"cannot pad {n} nodes down to {n_pad}")
+    widths = [(0, 0), (0, n_pad - n)] + [(0, 0)] * (a.ndim - 2)
+    if is_adj:
+        widths[2] = (0, n_pad - n)
+    return np.pad(a, widths)
+
+
+def merge(datasets: Dict[str, "AccelDataset"], n_pad: Optional[int] = None,
+          shuffle_seed: int = 0) -> MergedDataset:
+    """Merge per-app datasets into one cross-app training set.
+
+    ``datasets`` maps app name -> `AccelDataset` (any subset of
+    `graph.APP_VOCAB`, including a single app — used by the fine-tune leg
+    of `training.evaluate_transfer`). All inputs must share the base
+    feature layout (`graph.FEATURE_DIM`); node counts may differ and are
+    padded to a common ``n_pad`` (default: the widest input).
+    """
+    if not datasets:
+        raise ValueError("merge() needs at least one dataset")
+    names = tuple(sorted(datasets, key=graph_lib.APP_VOCAB.index))
+    dims = {datasets[a].x.shape[-1] for a in names}
+    if dims != {graph_lib.FEATURE_DIM}:
+        raise ValueError(f"merge() expects base feature dim "
+                         f"{graph_lib.FEATURE_DIM}, got {sorted(dims)}")
+    n_pad = n_pad or max(datasets[a].x.shape[1] for a in names)
+    adjs, xs, masks, umasks, ys, yraws, crits, ids, cfgs = \
+        [], [], [], [], [], [], [], [], []
+    for i, a in enumerate(names):
+        ds = datasets[a]
+        m = _pad_nodes(ds.mask, n_pad)
+        adjs.append(_pad_nodes(ds.adj, n_pad, is_adj=True))
+        xs.append(graph_lib.with_app_block(_pad_nodes(ds.x, n_pad), m, a))
+        masks.append(m)
+        umasks.append(_pad_nodes(ds.unit_mask, n_pad))
+        ys.append(ds.y)
+        yraws.append(ds.y_raw)
+        crits.append(_pad_nodes(ds.crit, n_pad))
+        ids.append(np.full(len(ds.y), i, np.int64))
+        cfgs.extend(ds.configs)
+    perm = np.random.default_rng(shuffle_seed).permutation(
+        sum(len(v) for v in ids))
+    cat = lambda parts: np.concatenate(parts, 0)[perm]
+    cfgs = [cfgs[j] for j in perm]
+    return MergedDataset(names, cat(adjs), cat(xs), cat(masks), cat(umasks),
+                         cat(ys), cat(yraws), cat(crits), cat(ids), cfgs,
+                         {a: datasets[a] for a in names})
 
 
 def canonical(app: apps_lib.AccelDef, config: Dict[str, int]

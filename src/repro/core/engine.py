@@ -443,6 +443,52 @@ class SurrogateEngine:
                    fixed_shape=True, cache=cache)
 
     @classmethod
+    def from_gnn_shared(cls, two_cfg, params, merged, app_name: str,
+                        entries: Dict[str, Sequence], *,
+                        chunk_size: int = 512,
+                        cache: bool = True) -> "SurrogateEngine":
+        """Per-app view of the cross-app unified surrogate.
+
+        ``merged`` is the `repro.core.dataset.MergedDataset` the shared
+        params were fitted on (its `per_app` bookkeeping supplies the
+        app's featurizer normalization and y denorm stats); ``params`` is
+        ONE shared two-stage model over the merged feature layout. The
+        view featurizes configs with the app's own `ConfigFeaturizer` at
+        the merged pad width, appends the app-identity one-hot block, and
+        denormalizes with the app's y stats — so five scenarios are
+        served off one set of trained parameters.
+        """
+        import jax.numpy as jnp
+        from repro.accel import apps as apps_lib
+        from repro.core import dataset as ds_lib
+        from repro.core import graph as graph_lib
+
+        if app_name not in merged.per_app:
+            raise ValueError(f"{app_name!r} not in merged dataset "
+                             f"{merged.app_names}")
+        ds = merged.per_app[app_name]
+        app = apps_lib.APPS[app_name]
+        feat = ds_lib.ConfigFeaturizer(ds.graph, app, entries,
+                                       merged.n_pad)
+        feat.set_norm(ds.x_mean, ds.x_std)
+        block = graph_lib.app_block(app_name, feat.mask)      # (N, A)
+        jax_predict = _make_jax_predict(two_cfg, params, feat.adj,
+                                        feat.mask)
+
+        def batch_fn(configs):
+            X = feat.normalized(configs)
+            Xa = np.concatenate(
+                [X, np.broadcast_to(block, (X.shape[0],) + block.shape)],
+                axis=-1)
+            y = np.asarray(jax_predict(jnp.asarray(Xa)))
+            y = ds.denorm_y(y)
+            y[:, 3] = 1 - y[:, 3]           # ssim -> 1-ssim (minimize)
+            return y
+
+        return cls(batch_fn, backend="jax-shared", chunk_size=chunk_size,
+                   fixed_shape=True, cache=cache)
+
+    @classmethod
     def from_gnn_ensemble(cls, ens, ds, app, entries: Dict[str, Sequence],
                           *, chunk_size: int = 512,
                           cache: bool = True) -> "SurrogateEngine":

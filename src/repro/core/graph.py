@@ -31,6 +31,31 @@ N_BASE = 9
 FEATURE_DIM = N_BASE + len(KIND_VOCAB)
 CRIT_IDX = 8
 
+# app-identity vocabulary for the cross-app unified surrogate: merged
+# feature rows append a one-hot app block AFTER the per-node layout above,
+# so the merged feature dim is FEATURE_DIM + len(APP_VOCAB) regardless of
+# which app subset is merged (leave-one-app-out training keeps the same
+# parameter shapes, and the held-out app's column simply never fires).
+APP_VOCAB = ("sobel", "gaussian", "kmeans", "dct8", "fir15")
+MERGED_FEATURE_DIM = FEATURE_DIM + len(APP_VOCAB)
+
+
+def app_block(app_name: str, mask: np.ndarray) -> np.ndarray:
+    """(..., N, len(APP_VOCAB)) one-hot app-identity block, masked so
+    padding rows stay zero. ``mask`` is the (..., N) node mask."""
+    if app_name not in APP_VOCAB:
+        raise ValueError(f"unknown app {app_name!r}; APP_VOCAB={APP_VOCAB}")
+    block = np.zeros(mask.shape + (len(APP_VOCAB),), np.float32)
+    block[..., APP_VOCAB.index(app_name)] = mask
+    return block
+
+
+def with_app_block(x: np.ndarray, mask: np.ndarray,
+                   app_name: str) -> np.ndarray:
+    """Append the app-identity one-hot block to a feature tensor."""
+    return np.concatenate([x, app_block(app_name, mask)],
+                          axis=-1).astype(np.float32)
+
 
 @dataclass(frozen=True)
 class SimpleGraph:
@@ -131,11 +156,19 @@ def node_features(graph: SimpleGraph, app: AccelDef,
 
 
 def pad_batch(graphs: Sequence[np.ndarray], feats: Sequence[np.ndarray],
-              n_pad: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """-> (adj (B,N,N) normalized, x (B,N,F), mask (B,N))."""
+              n_pad: int, feature_dim: int = None
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """-> (adj (B,N,N) normalized, x (B,N,F), mask (B,N)).
+
+    An empty batch returns (0, n_pad, ...) tensors (feature width from
+    ``feature_dim``, defaulting to FEATURE_DIM) instead of raising."""
     B = len(graphs)
+    if len(graphs) != len(feats):
+        raise ValueError(f"pad_batch: {len(graphs)} graphs vs "
+                         f"{len(feats)} feature blocks")
+    F = feats[0].shape[-1] if feats else (feature_dim or FEATURE_DIM)
     A = np.zeros((B, n_pad, n_pad), np.float32)
-    X = np.zeros((B, n_pad, feats[0].shape[-1]), np.float32)
+    X = np.zeros((B, n_pad, F), np.float32)
     M = np.zeros((B, n_pad), np.float32)
     for b, (a, x) in enumerate(zip(graphs, feats)):
         n = a.shape[0]

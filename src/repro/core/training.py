@@ -327,14 +327,19 @@ def _build_scan_fit(cfg: models.TwoStageConfig, tc: TrainConfig, data,
 def fit_two_stage(cfg: models.TwoStageConfig, ds_train: AccelDataset,
                   tc: TrainConfig = TrainConfig(),
                   log_every: int = 0, return_history: bool = False,
-                  ds_val: Optional[AccelDataset] = None):
+                  ds_val: Optional[AccelDataset] = None,
+                  params0: Optional[models.TwoStageParams] = None):
     """Train the two-stage model; returns params (and FitHistory if asked).
 
     `backend="scan"` runs one jitted lax.scan over (epochs x steps) with a
     donated carry; `backend="loop"` is the per-epoch reference loop. With
     `tc.patience > 0`, a validation split (`ds_val`, or `tc.val_frac`
     carved off the tail of `ds_train`) drives early stopping and the
-    best-val params snapshot is returned."""
+    best-val params snapshot is returned.
+
+    ``params0`` warm-starts from existing parameters (numpy leaves are
+    re-deviced) — the fine-tune leg of `evaluate_transfer` and cached
+    cross-app params from the artifact store both enter here."""
     n_total = ds_train.y.shape[0]
     val_data = None
     if tc.patience > 0:
@@ -347,7 +352,10 @@ def fit_two_stage(cfg: models.TwoStageConfig, ds_train: AccelDataset,
         data = _shard_data(data)
     n = ds_train.y.shape[0]
 
-    params0 = models.init(jax.random.PRNGKey(tc.seed), cfg)
+    if params0 is None:
+        params0 = models.init(jax.random.PRNGKey(tc.seed), cfg)
+    else:
+        params0 = jax.tree.map(jnp.asarray, params0)
 
     if tc.backend == "scan":
         idx, w, dkey = _plan_for(tc, n, min(tc.batch_size, n))
@@ -581,6 +589,98 @@ def evaluate(cfg: models.TwoStageConfig, params: models.TwoStageParams,
     out["critical_path"] = {
         "accuracy": float(correct[um].mean()) if um.any() else 1.0}
     return out
+
+
+def evaluate_merged(cfg: models.TwoStageConfig,
+                    params: models.TwoStageParams,
+                    mds) -> Dict[str, Dict]:
+    """`evaluate` for a `dataset.MergedDataset` (or a `.view(app)` of one):
+    predictions denormalized per row with each row's own app stats."""
+    y_pred, crit_logits = models.predict(
+        cfg, params, jnp.asarray(mds.adj), jnp.asarray(mds.x),
+        jnp.asarray(mds.mask))
+    y_pred = mds.denorm_rows(np.asarray(y_pred))
+    y_true = mds.y_raw
+    out: Dict[str, Dict] = {}
+    for i, t in enumerate(models.TARGETS):
+        out[t] = {"r2": r2_score(y_true[:, i], y_pred[:, i]),
+                  "mape": mape(y_true[:, i], y_pred[:, i])}
+    pred_bits = (jax.nn.sigmoid(crit_logits) > 0.5)
+    um = mds.unit_mask > 0
+    correct = np.asarray(pred_bits) == (mds.crit > 0.5)
+    out["critical_path"] = {
+        "accuracy": float(correct[um].mean()) if um.any() else 1.0}
+    return out
+
+
+def fit_unified(datasets: Dict[str, AccelDataset],
+                cfg: models.TwoStageConfig, tc: TrainConfig = TrainConfig(),
+                split: float = 0.9, n_pad: Optional[int] = None,
+                params0: Optional[models.TwoStageParams] = None):
+    """Fit ONE shared two-stage GNN over the union of per-app datasets.
+
+    Returns (params, merged, metrics) where ``metrics`` holds the overall
+    test-split quality plus a per-app breakdown (``metrics["per_app"]``).
+    ``cfg.gnn.feature_dim`` must be `graph.MERGED_FEATURE_DIM` (the merged
+    feature layout is app-subset independent)."""
+    from repro.core import dataset as ds_lib
+    from repro.core.graph import MERGED_FEATURE_DIM
+
+    if cfg.gnn.feature_dim != MERGED_FEATURE_DIM:
+        raise ValueError(
+            f"unified surrogate needs feature_dim={MERGED_FEATURE_DIM} "
+            f"(got {cfg.gnn.feature_dim}); build the GNNConfig with "
+            f"feature_dim=graph.MERGED_FEATURE_DIM")
+    merged = ds_lib.merge(datasets, n_pad=n_pad)
+    tr, te = merged.split(split)
+    params = fit_two_stage(cfg, tr, tc, params0=params0)
+    metrics = evaluate_merged(cfg, params, te)
+    metrics["per_app"] = {
+        a: evaluate_merged(cfg, params, te.view(a))
+        for a in merged.app_names if (te.app_ids ==
+                                      merged.app_names.index(a)).any()}
+    return params, merged, metrics
+
+
+def evaluate_transfer(datasets: Dict[str, AccelDataset], holdout: str,
+                      cfg: models.TwoStageConfig,
+                      tc: TrainConfig = TrainConfig(),
+                      finetune_epochs: int = 5,
+                      split: float = 0.9) -> Dict[str, object]:
+    """Leave-one-app-out transfer quality of the unified surrogate.
+
+    Trains the shared model on every app EXCEPT ``holdout``, then reports
+    per-objective R2/MAPE on the holdout app's test split twice:
+
+    * ``zero_shot``  — the shared params as-is. The holdout's app-identity
+      column never fired during training (its input was all-zero), so
+      those weights sit at init: this measures pure cross-app structure
+      transfer, ApproxGNN-style.
+    * ``fine_tuned`` — after ``finetune_epochs`` warm-started epochs on
+      the holdout's train split (`fit_two_stage(params0=shared)`), i.e.
+      new-scenario onboarding at a fraction of a from-scratch fit.
+
+    Returns {holdout, shared_apps, shared_metrics, zero_shot, fine_tuned,
+    finetune_epochs}."""
+    from repro.core import dataset as ds_lib
+
+    if holdout not in datasets:
+        raise ValueError(f"holdout {holdout!r} not in {sorted(datasets)}")
+    rest = {a: d for a, d in datasets.items() if a != holdout}
+    if not rest:
+        raise ValueError("evaluate_transfer needs >= 2 apps")
+    n_pad = max(d.x.shape[1] for d in datasets.values())
+    params, _merged, shared_metrics = fit_unified(rest, cfg, tc, split,
+                                                  n_pad=n_pad)
+    hold = ds_lib.merge({holdout: datasets[holdout]}, n_pad=n_pad)
+    tr_h, te_h = hold.split(split)
+    zero_shot = evaluate_merged(cfg, params, te_h)
+    ft_tc = replace(tc, epochs=finetune_epochs, patience=0)
+    ft_params = fit_two_stage(cfg, tr_h, ft_tc, params0=params)
+    fine_tuned = evaluate_merged(cfg, ft_params, te_h)
+    return {"holdout": holdout, "shared_apps": sorted(rest),
+            "shared_metrics": shared_metrics, "zero_shot": zero_shot,
+            "fine_tuned": fine_tuned, "finetune_epochs": finetune_epochs}
 
 
 def r2_score(y, yh) -> float:
