@@ -1,23 +1,29 @@
-"""Search-layer benchmark: island-model vs single-population DSE.
+"""Search-layer benchmark: batched island fleet vs single-population DSE.
 
 PR 1 made surrogate evaluation batched and memoized; this benchmark
-measures the *sampler* layer that sits on top:
+measures (and GATES) the sampler layer that sits on top:
 
   * vectorized Pareto kernels — `non_dominated_sort` / `_niche_select`
-    speedup over the reference Python-loop implementations;
-  * islands vs serial — merged-front hypervolume and wall-clock of
-    `repro.core.islands.run_islands` against single-population `nsga3`
-    at equal evaluation budget, on the Sobel design space under the
-    critical-path-faithful `library_proxy_evaluator` (the evaluator is
-    ~free, so wall-clock is dominated by the search itself).
+    speedup over the reference Python-loop implementations
+    (gate: vectorized niche select >= 1x the reference);
+  * blockwise archive cull — `pareto_mask_blockwise` on a large random
+    archive (gate: 1M rows in < 1s in full mode);
+  * islands vs serial — merged-front hypervolume and wall-clock of the
+    batched `repro.core.islands.run_islands` against single-population
+    `nsga3` at equal evaluation budget on the Sobel design space under
+    the critical-path-faithful `library_proxy_evaluator` (the evaluator
+    is ~free, so wall-clock is dominated by the search itself). The
+    scalar `run_islands_ref` fleet is timed too (full mode) so the
+    batched-program speedup is visible.
+    Gates: mean hv_ratio >= 1.0 AND islands wall-clock <= serial.
 
-    PYTHONPATH=src python benchmarks/dse_bench.py [--smoke]
+    PYTHONPATH=src python benchmarks/dse_bench.py [--mode smoke|full]
         [--budget 2048] [--seeds 0,1,2] [--out BENCH_dse.json]
 
 Writes a JSON report (default BENCH_dse.json in the repo root) and prints
-CSV-ish rows like benchmarks/run.py. `--smoke` is the CI mode: a tiny
-islands run (pop=8, budget=64) that exercises the whole orchestrator
-(migration included) in seconds.
+CSV-ish rows like benchmarks/run.py. ``--mode smoke`` is the CI
+configuration: same gated search comparison, smaller kernel/cull sizes,
+no informational extra fleets. Exits non-zero when any gate fails.
 """
 from __future__ import annotations
 
@@ -50,10 +56,11 @@ def pareto_kernel_bench(n: int = 512, n_obj: int = 4, reps: int = 3):
     assert all(np.array_equal(a, b) for a, b in zip(fv, fr))
     front = F[fv[0]]
     need = max(1, len(front) // 2)
-    _, t_nvec = best(lambda: dse._niche_select(
+    sel_v, t_nvec = best(lambda: dse._niche_select(
         front, need, refs, np.random.default_rng(0)))
-    _, t_nref = best(lambda: dse._niche_select_ref(
+    sel_r, t_nref = best(lambda: dse._niche_select_ref(
         front, need, refs, np.random.default_rng(0)))
+    assert np.array_equal(sel_v, sel_r)
     out = {"n": n, "n_obj": n_obj,
            "nds_ref_ms": round(t_ref * 1e3, 2),
            "nds_vec_ms": round(t_vec * 1e3, 2),
@@ -63,6 +70,26 @@ def pareto_kernel_bench(n: int = 512, n_obj: int = 4, reps: int = 3):
            "niche_speedup": round(t_nref / t_nvec, 1)}
     print(f"dse_bench,pareto_kernels,n={n},nds_speedup={out['nds_speedup']}x,"
           f"niche_speedup={out['niche_speedup']}x")
+    return out
+
+
+def blockwise_cull_bench(n_rows: int, n_obj: int = 4, gate_s: float = 1.0):
+    """Time `pareto_mask_blockwise` on a random archive; parity-check the
+    mask against the flat cull on a subsample."""
+    from repro.core import dse
+
+    rng = np.random.default_rng(2)
+    F = rng.random((n_rows, n_obj))
+    t0 = time.perf_counter()
+    mask = dse.pareto_mask_blockwise(F)
+    dt = time.perf_counter() - t0
+    sub = rng.choice(n_rows, size=min(n_rows, 20_000), replace=False)
+    assert np.array_equal(dse.pareto_mask_blockwise(F[sub], block=1024),
+                          dse.pareto_mask(F[sub]))
+    out = {"rows": n_rows, "n_obj": n_obj, "front": int(mask.sum()),
+           "time_s": round(dt, 3), "gate_s": gate_s}
+    print(f"dse_bench,blockwise_cull,rows={n_rows},front={out['front']},"
+          f"time_s={dt:.3f}")
     return out
 
 
@@ -79,25 +106,36 @@ def _setup(app_name: str):
 
 
 def islands_vs_serial(app_name: str, budget: int, seeds, serial_pop: int,
-                      pop: int, n_islands: int, epochs: int, migrate_k: int):
-    """One row per (seed, fleet): hv + wall-clock vs serial nsga3."""
+                      pop: int, n_islands: int, epochs: int, migrate_k: int,
+                      with_extras: bool = True):
+    """One row per (seed, fleet): hv + wall-clock vs serial nsga3.
+
+    The gated fleet is "nsga3-cones" — the batched homogeneous
+    cone-partitioned NSGA-III fleet with merged-front elite broadcast
+    (the `run_islands` defaults). `with_extras` adds informational rows:
+    the scalar reference orchestrator at the same config (batched-program
+    speedup) and the classic mixed fleet.
+    """
     from repro.core import dse
-    from repro.core.islands import run_islands
+    from repro.core.islands import (DEFAULT_SAMPLERS, run_islands,
+                                    run_islands_ref)
 
     sizes, evaluate = _setup(app_name)
-    fleets = {"nsga3-cones": ("nsga3",) * n_islands,
-              "mixed": None}          # None -> DEFAULT_SAMPLERS
+    fleets = [("nsga3-cones", run_islands, None)]
+    if with_extras:
+        fleets += [("nsga3-cones-ref", run_islands_ref, None),
+                   ("mixed", run_islands, DEFAULT_SAMPLERS)]
     rows = []
     for seed in seeds:
         t0 = time.perf_counter()
         serial = dse.run_nsga(sizes, evaluate, budget, seed=seed,
                               pop=serial_pop)
         t_serial = time.perf_counter() - t0
-        for fleet, mix in fleets.items():
+        for fleet, runner, mix in fleets:
             t0 = time.perf_counter()
-            isl = run_islands(sizes, evaluate, budget, seed=seed,
-                              n_islands=n_islands, samplers=mix, pop=pop,
-                              epochs=epochs, migrate_k=migrate_k)
+            isl = runner(sizes, evaluate, budget, seed=seed,
+                         n_islands=n_islands, samplers=mix, pop=pop,
+                         epochs=epochs, migrate_k=migrate_k)
             t_isl = time.perf_counter() - t0
             ref = dse.hv_reference(np.concatenate(
                 [serial.pareto_objs, isl.pareto_objs], 0))
@@ -112,6 +150,7 @@ def islands_vs_serial(app_name: str, budget: int, seeds, serial_pop: int,
                    "islands": {"evaluated": isl.evaluated,
                                "front": len(isl.pareto_configs),
                                "hv": round(hv_i, 1),
+                               "max_batch": isl.stats.get("max_batch"),
                                "time_s": round(t_isl, 3)},
                    "hv_ratio": round(hv_i / hv_s, 4)}
             rows.append(row)
@@ -122,10 +161,38 @@ def islands_vs_serial(app_name: str, budget: int, seeds, serial_pop: int,
     return rows
 
 
+def _apply_gates(report) -> list:
+    """The CI/acceptance gates; returns a list of failure strings."""
+    fails = []
+    pk = report["pareto_kernels"]
+    if pk["niche_speedup"] < 1.0:
+        fails.append(f"niche_speedup {pk['niche_speedup']} < 1.0")
+    bc = report["blockwise_cull"]
+    if bc["time_s"] >= bc["gate_s"]:
+        fails.append(f"blockwise cull {bc['time_s']}s >= {bc['gate_s']}s "
+                     f"on {bc['rows']} rows")
+    gated = [r for r in report["islands_vs_serial"]
+             if r["fleet"] == "nsga3-cones"]
+    mean_ratio = float(np.mean([r["hv_ratio"] for r in gated]))
+    t_isl = sum(r["islands"]["time_s"] for r in gated)
+    t_ser = sum(r["serial"]["time_s"] for r in gated)
+    report["gates"] = {"mean_hv_ratio": round(mean_ratio, 4),
+                       "islands_time_s": round(t_isl, 3),
+                       "serial_time_s": round(t_ser, 3)}
+    if mean_ratio < 1.0:
+        fails.append(f"mean hv_ratio {mean_ratio:.4f} < 1.0")
+    if t_isl > t_ser:
+        fails.append(f"islands wall-clock {t_isl:.3f}s > serial "
+                     f"{t_ser:.3f}s")
+    return fails
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", choices=("smoke", "full"), default="full",
+                    help="smoke: CI gates with small kernel/cull sizes")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny islands run for CI (pop=8, budget=64)")
+                    help="alias for --mode smoke")
     ap.add_argument("--app", default="sobel")
     ap.add_argument("--budget", type=int, default=2048)
     ap.add_argument("--seeds", default="0,1,2")
@@ -134,50 +201,38 @@ def main() -> None:
                     help="per-island population")
     ap.add_argument("--islands", type=int, default=4)
     ap.add_argument("--epochs", type=int, default=4)
-    ap.add_argument("--migrate-k", type=int, default=2)
+    ap.add_argument("--migrate-k", type=int, default=4)
     ap.add_argument("--out", default="BENCH_dse.json")
     args = ap.parse_args()
+    mode = "smoke" if args.smoke else args.mode
+    smoke = mode == "smoke"
 
-    report = {"mode": "smoke" if args.smoke else "full", "app": args.app,
-              "pareto_kernels": pareto_kernel_bench(
-                  n=128 if args.smoke else 512)}
+    seeds = [int(s) for s in args.seeds.split(",") if s]
+    report = {"mode": mode, "app": args.app,
+              "pareto_kernels": pareto_kernel_bench(n=128 if smoke else 512),
+              "blockwise_cull": blockwise_cull_bench(
+                  n_rows=131_072 if smoke else 1_000_000, gate_s=1.0)}
+    report["islands_vs_serial"] = islands_vs_serial(
+        args.app, args.budget, seeds, args.serial_pop, args.pop,
+        args.islands, args.epochs, args.migrate_k, with_extras=not smoke)
+    by_fleet = {}
+    for r in report["islands_vs_serial"]:
+        by_fleet.setdefault(r["fleet"], []).append(r["hv_ratio"])
+    report["mean_hv_ratio"] = {f: round(float(np.mean(v)), 4)
+                               for f, v in by_fleet.items()}
+    report["best_hv_ratio"] = {f: round(float(np.max(v)), 4)
+                               for f, v in by_fleet.items()}
+    print(f"dse_bench,summary,mean_hv_ratio={report['mean_hv_ratio']}")
 
-    if args.smoke:
-        # satellite CI gate: the islands sampler end-to-end on a tiny
-        # budget — orchestration, migration, history, determinism
-        from repro.core.islands import run_islands
-
-        sizes, evaluate = _setup(args.app)
-        t0 = time.perf_counter()
-        res = run_islands(sizes, evaluate, 64, seed=0, n_islands=4, pop=8,
-                          epochs=2, migrate_k=2)
-        dt = time.perf_counter() - t0
-        assert res.pareto_configs, "smoke islands produced an empty front"
-        assert res.history, "smoke islands produced no history"
-        report["smoke_islands"] = {
-            "budget": 64, "pop": 8, "evaluated": res.evaluated,
-            "front": len(res.pareto_configs),
-            "epochs": len(res.history), "time_s": round(dt, 3)}
-        print(f"dse_bench,smoke,evaluated={res.evaluated},"
-              f"front={len(res.pareto_configs)},time_s={dt:.2f}")
-    else:
-        seeds = [int(s) for s in args.seeds.split(",") if s]
-        rows = islands_vs_serial(args.app, args.budget, seeds,
-                                 args.serial_pop, args.pop, args.islands,
-                                 args.epochs, args.migrate_k)
-        report["islands_vs_serial"] = rows
-        by_fleet = {}
-        for r in rows:
-            by_fleet.setdefault(r["fleet"], []).append(r["hv_ratio"])
-        report["mean_hv_ratio"] = {f: round(float(np.mean(v)), 4)
-                                   for f, v in by_fleet.items()}
-        report["best_hv_ratio"] = {f: round(float(np.max(v)), 4)
-                                   for f, v in by_fleet.items()}
-        print(f"dse_bench,summary,mean_hv_ratio={report['mean_hv_ratio']}")
+    fails = _apply_gates(report)
+    report["gates"]["ok"] = not fails
 
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"dse_bench,report,{out}")
+    if fails:
+        raise SystemExit("dse_bench GATE FAILURES: " + "; ".join(fails))
+    print("dse_bench,gates,ok")
 
 
 if __name__ == "__main__":

@@ -172,7 +172,7 @@ def mul_drum(a, b, na, nb, m):
 
 def _isqrt_exact(x):
     """Integer sqrt via float + fixup (exact for x < 2^24)."""
-    r = jnp.floor(jnp.sqrt(x.astype(jnp.float64))).astype(jnp.int32)
+    r = jnp.floor(jnp.sqrt(x.astype(jnp.float32))).astype(jnp.int32)
     r = jnp.where((r + 1) * (r + 1) <= x, r + 1, r)
     r = jnp.where(r * r > x, r - 1, r)
     return jnp.maximum(r, 0)

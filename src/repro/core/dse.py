@@ -151,6 +151,52 @@ def non_dominated_sort_ref(F: np.ndarray) -> List[np.ndarray]:
     return fronts
 
 
+def non_dominated_ranks(F: np.ndarray) -> np.ndarray:
+    """Front index ("rank") per row of an (n, n_obj) minimization matrix:
+    rank 0 is the Pareto set, rank k dominates only ranks > k. Equals the
+    front index each row gets from `non_dominated_sort` (parity-tested),
+    as a flat (n,) array — the layout the batched island fleet consumes.
+    """
+    F = np.asarray(F)
+    if len(F) == 0:
+        return np.zeros(0, np.int64)
+    return non_dominated_ranks_batched(F[None])[0]
+
+
+def non_dominated_ranks_batched(F: np.ndarray) -> np.ndarray:
+    """`non_dominated_ranks` vectorized over a leading island axis.
+
+    `F` is (n_islands, n, n_obj); returns (n_islands, n) int64 ranks.
+    One broadcasted (I, n, n) domination tensor, fronts peeled for all
+    islands in lockstep by bulk-decrementing domination counts — the
+    per-island results match `non_dominated_sort` exactly. Islands that
+    run out of fronts early simply stop contributing to later peels.
+    This is the NumPy reference of the island fleet's selection kernel;
+    `repro.core.islands.fleet_ranks` adds the jit/SPMD-sharded JAX
+    version (bit-identical, any device count).
+    """
+    F = np.asarray(F)
+    n_islands, n, _ = F.shape
+    less = np.all(F[:, :, None, :] <= F[:, None, :, :], axis=-1)
+    # strict test via transpose, as in non_dominated_sort
+    D = less & ~np.transpose(less, (0, 2, 1))    # D[b,i,j]: i dominates j
+    Di = D.astype(np.int64)
+    dom = Di.sum(1)                              # (I, n) dominator counts
+    ranks = np.full((n_islands, n), -1, np.int64)
+    r = 0
+    while True:
+        cur = dom == 0
+        if not cur.any():
+            break
+        ranks[cur] = r
+        # front members never dominate earlier fronts or each other, so
+        # the bulk decrement only touches strictly later fronts
+        dom -= np.einsum("bij,bi->bj", Di, cur.astype(np.int64))
+        dom[cur] = -1                            # retire ranked points
+        r += 1
+    return ranks
+
+
 def crowding_distance(F: np.ndarray) -> np.ndarray:
     """NSGA-II crowding distance per row of F (inf on objective extremes)."""
     n, m = F.shape
@@ -166,36 +212,70 @@ def crowding_distance(F: np.ndarray) -> np.ndarray:
 def pareto_mask(F: np.ndarray) -> np.ndarray:
     """Boolean mask of the first non-dominated front of `F`.
 
-    Sum-sorted simple cull: a dominator always has a strictly smaller
-    objective sum, so sweeping in ascending-sum order guarantees that any
-    point still unmarked when reached is on the front; each front member
-    then eliminates its dominated set with one vectorized pass. O(n)
-    memory and O(front_size * n) heavy work — cheap on run-archive-sized
-    matrices (tens of thousands of rows) where the full (n, n) domination
-    matrix of `non_dominated_sort` would not be.
+    Sum-sorted compacting cull: a dominator always has a strictly smaller
+    objective sum (ties are non-dominating), so sweeping in ascending-sum
+    order guarantees the first *surviving* row is always on the front;
+    each front member then eliminates its dominated set with one
+    vectorized pass over the remaining candidates, which are physically
+    compacted so later passes touch only survivors. O(n) memory and
+    O(sum of survivor counts) heavy work — on random fronts the first few
+    members remove most rows, so this stays near-linear in practice.
+    Archive-scale callers with very large n should use
+    `pareto_mask_blockwise`.
     """
     F = np.asarray(F)
     n = len(F)
     if n == 0:
         return np.zeros(0, bool)
     order = np.argsort(F.sum(1), kind="stable")
-    Fs = F[order]
-    eff = np.ones(n, bool)
-    for i in range(n):
-        if not eff[i]:
-            continue
-        dominated = np.all(Fs >= Fs[i], axis=1) & np.any(Fs > Fs[i], axis=1)
-        eff &= ~dominated
-    out = np.empty(n, bool)
-    out[order] = eff
+    Fs, ids = F[order], order
+    out = np.zeros(n, bool)
+    while len(Fs):
+        f = Fs[0]
+        out[ids[0]] = True
+        keep = ~(np.all(Fs >= f, axis=1) & np.any(Fs > f, axis=1))
+        keep[0] = False                  # retire the new front member
+        Fs, ids = Fs[keep], ids[keep]
     return out
+
+
+def pareto_mask_blockwise(F: np.ndarray, block: int = 8192) -> np.ndarray:
+    """`pareto_mask` for very large archives: divide-and-conquer cull.
+
+    Rows are culled within `block`-sized chunks first, then the union of
+    the chunk fronts is culled once more. Exact: any globally dominated
+    row is dominated by some global front member (domination is
+    transitive), and every global front member survives its chunk cull,
+    so the cross-chunk pass over chunk-front survivors reproduces
+    `pareto_mask(F)` bit-for-bit (property-tested in
+    tests/test_pareto_props.py). Million-row merged island archives cull
+    in well under a second (benchmarks/dse_bench.py, BENCH_dse.json).
+    """
+    F = np.asarray(F)
+    n = len(F)
+    if n <= block:
+        return pareto_mask(F)
+    cand = np.concatenate([
+        np.arange(i, min(i + block, n))[pareto_mask(F[i:i + block])]
+        for i in range(0, n, block)])
+    out = np.zeros(n, bool)
+    out[cand[pareto_mask(F[cand])]] = True
+    return out
+
+
+# archives larger than this are culled blockwise by `pareto_front`
+_BLOCKWISE_MIN = 8192
 
 
 def pareto_front(configs: Sequence[Config], F: np.ndarray
                  ) -> Tuple[List[Config], np.ndarray]:
     """First non-dominated front of (configs, F), deduplicated on
-    (rounded) objective rows. Returns (configs, objectives)."""
-    idx = np.where(pareto_mask(F))[0] if len(F) else np.arange(0)
+    (rounded) objective rows. Returns (configs, objectives). Archives
+    beyond `_BLOCKWISE_MIN` rows are culled blockwise."""
+    if len(F) > _BLOCKWISE_MIN:
+        idx = np.where(pareto_mask_blockwise(F))[0]
+    else:
+        idx = np.where(pareto_mask(F))[0] if len(F) else np.arange(0)
     # dedupe identical objective rows
     seen, keep = set(), []
     for i in idx:
@@ -300,19 +380,30 @@ def _niche_select(F: np.ndarray, need: int, refs: np.ndarray,
     tests/test_dse_parallel.py).
     """
     d, nearest = _perp_distances(F, refs)
+    n, n_refs = len(F), len(refs)
+    dn = d[np.arange(n), nearest]
+    # Pre-sort every point once: primary key nearest ray, secondary its
+    # distance to that ray, tertiary index (matches the reference's
+    # first-minimum tiebreak). Each ray then owns a contiguous slice and
+    # the greedy fill just advances a per-ray pointer — no per-iteration
+    # masking/rescans of the whole front.
+    order = np.lexsort((np.arange(n), dn, nearest))
+    ray_sorted = nearest[order]
+    starts = np.searchsorted(ray_sorted, np.arange(n_refs))
+    ends = np.searchsorted(ray_sorted, np.arange(n_refs) + 1)
+    ptr = starts.copy()
+    counts = np.zeros(n_refs, np.int64)
+    counts[starts == ends] = 1 << 30            # rays with no members
     chosen: List[int] = []
-    counts = np.zeros(len(refs), np.int64)
-    avail = np.ones(len(F), bool)
-    while len(chosen) < need and avail.any():
+    while len(chosen) < need:
         r = int(np.argmin(counts))
-        members = np.where(avail & (nearest == r))[0]
-        if not members.size:
-            counts[r] = 1 << 30
-            continue
-        pick = int(members[np.argmin(d[members, r])])
-        chosen.append(pick)
-        avail[pick] = False
+        if counts[r] >= 1 << 30:                # every ray exhausted
+            break
+        chosen.append(int(order[ptr[r]]))
+        ptr[r] += 1
         counts[r] += 1
+        if ptr[r] >= ends[r]:
+            counts[r] = 1 << 30
     return np.asarray(chosen, np.int64)
 
 
@@ -570,7 +661,13 @@ def _run_islands(*args, **kwargs) -> DSEResult:
     return run_islands(*args, **kwargs)
 
 
+def _run_islands_ref(*args, **kwargs) -> DSEResult:
+    # the scalar parity oracle, selectable from pipelines/benchmarks
+    from repro.core.islands import run_islands_ref
+    return run_islands_ref(*args, **kwargs)
+
+
 SAMPLERS = {"random": run_random, "tpe": run_tpe,
             "nsga2": lambda *a, **k: run_nsga(*a, variant="nsga2", **k),
             "nsga3": lambda *a, **k: run_nsga(*a, variant="nsga3", **k),
-            "islands": _run_islands}
+            "islands": _run_islands, "islands_ref": _run_islands_ref}

@@ -66,6 +66,9 @@ class EngineStats:
         evaluated:    unique configs actually sent to the backend.
         padded:       wasted rows added to reach a fixed-shape bucket.
         chunks:       backend batch calls issued.
+        max_batch:    largest single ``engine(configs)`` request seen —
+                      the island fleet's fused per-generation block shows
+                      up here as ``n_islands * pop``.
         eval_time_s:  time inside the backend batch function.
         wall_time_s:  end-to-end time inside the engine (incl. cache
                       assembly).
@@ -76,6 +79,7 @@ class EngineStats:
     evaluated: int = 0
     padded: int = 0
     chunks: int = 0
+    max_batch: int = 0
     eval_time_s: float = 0.0
     wall_time_s: float = 0.0
 
@@ -91,6 +95,7 @@ class EngineStats:
         return {"calls": self.calls, "configs": self.configs,
                 "cache_hits": self.cache_hits, "evaluated": self.evaluated,
                 "padded": self.padded, "chunks": self.chunks,
+                "max_batch": self.max_batch,
                 "eval_time_s": round(self.eval_time_s, 4),
                 "wall_time_s": round(self.wall_time_s, 4),
                 "cache_hit_rate": round(self.cache_hit_rate, 4),
@@ -311,6 +316,7 @@ class SurrogateEngine:
         keys = [tuple(int(v) for v in c) for c in configs]
         self.stats.calls += 1
         self.stats.configs += len(keys)
+        self.stats.max_batch = max(self.stats.max_batch, len(keys))
         miss: List[Config] = []
         seen = set()
         for k in keys:

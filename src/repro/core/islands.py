@@ -1,40 +1,58 @@
-"""Island-model parallel DSE: N sampler islands over one shared engine.
+"""Island-model parallel DSE as ONE batched array program.
 
 The paper's search layer (Sec III-C) is a single serial NSGA-III
 population. Once surrogate evaluation is batched and memoized
 (`repro.core.engine.SurrogateEngine`), the sampler itself becomes the
 bottleneck — and a single population also converges to one basin of the
-4-objective landscape. The island model scales the search layer:
+4-objective landscape. The island fleet scales the search layer:
 
-  * **N islands**, each a persistent sampler population (mixed ``nsga3`` /
-    ``nsga2`` / ``tpe`` / ``random`` by default) with a distinct seed, so
-    the islands explore with genuinely different biases;
-  * **one shared `SurrogateEngine`** — every island's evaluations land in
-    the same memo cache, so configs rediscovered by a second island are
-    free, and the engine stats aggregate the whole search;
-  * **ring migration** — every epoch each island sends its Pareto elites
-    to its right-hand neighbour *with their objective rows attached*:
-    migration never re-spends budget, it splices known points into the
-    receiver's population/archive;
+  * **N islands** — by default a homogeneous cone-partitioned ``nsga3``
+    fleet (each island niches inside a distinct Das-Dennis reference
+    cone; the merge restores full front coverage) with per-island seeds
+    derived from ``(seed, island)``;
+  * **one stacked state** — populations live as an ``(n_islands, pop,
+    n_units)`` integer array and objective rows as ``(n_islands, pop,
+    n_obj)``; selection runs on batched non-domination ranks
+    (`fleet_ranks`: NumPy, or a jitted integer-rank JAX kernel
+    SPMD-sharded over the island axis via
+    `meshes.shard_leading_axis`), crossover/mutation arithmetic is one
+    ``(n_islands, pop, n_units)`` tensor step — no threads, no
+    per-island Python evolution loops;
+  * **one fused evaluation** per generation: every island's proposals go
+    through the shared `SurrogateEngine` as a single
+    ``(n_islands*pop, n_units)`` block, so cross-island rediscoveries
+    are cache hits and the engine stats aggregate the whole search;
+  * **elite broadcast migration** (default) — at each epoch boundary all
+    islands receive the top-``migrate_k`` scalarized members of the
+    *merged* Pareto front, objective rows attached: migration never
+    re-spends budget. Classic ``migration="ring"`` (right-neighbour
+    elites) is kept as an option;
   * **merged global archive** — the final front is the non-dominated set
-    over every config any island evaluated, and `DSEResult.history`
-    traces the merged front's size/hypervolume per epoch.
+    over every config any island evaluated (blockwise Pareto cull for
+    large archives), and `DSEResult.history` traces the merged front's
+    size/hypervolume per epoch.
 
 Unlike naively running the `repro.core.dse` samplers in rounds, islands
 evolve *continuously*: populations persist across epochs (no warm-start
 re-evaluation, no re-randomization), so at equal request budget the
 islands spend exactly as much fresh search as the serial samplers.
 
-Determinism: island seeds derive from (seed, island) only and islands
-interact solely at the epoch barrier, so results are independent of
-thread scheduling — ``parallel=True`` and ``parallel=False`` produce
-identical fronts (asserted in tests/test_dse_parallel.py).
+Determinism and parity: the scalar per-island orchestrator is kept as
+`run_islands_ref` — the oracle the batched program is tested against.
+Both consume identical per-island RNG streams, so their merged fronts
+and hypervolume trajectories are IDENTICAL (tests/test_islands_batched);
+the JAX rank kernel works on exact integer ranks, so results are also
+bit-identical across host device counts. Fleets containing the
+sequential ``tpe``/``random`` state machines fall back to the scalar
+path (same results, schedule-independent).
 
-Exposed as `run_islands(...)`, as ``dse.SAMPLERS["islands"]``, and as
+Exposed as `run_islands(...)`, as ``dse.SAMPLERS["islands"]`` (the
+scalar oracle as ``SAMPLERS["islands_ref"]``), and as
 ``PipelineConfig(sampler="islands")``.
 """
 from __future__ import annotations
 
+import sys
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -44,46 +62,68 @@ import numpy as np
 from repro.core.dse import (Config, DSEResult, EvalFn, _crossover_mutate,
                             _niche_select, as_engine, crowding_distance,
                             das_dennis, hv_reference, hypervolume,
-                            non_dominated_sort, pareto_front, tpe_propose)
+                            non_dominated_ranks_batched, non_dominated_sort,
+                            pareto_front, tpe_propose)
 
-# islands cycle through these samplers by default (island i runs
-# DEFAULT_SAMPLERS[i % 4])
+# the classic mixed fleet (island i runs DEFAULT_SAMPLERS[i % 4]); pass as
+# `samplers=` explicitly — the default fleet is homogeneous nsga3 cones,
+# which dominates the mixed fleet on merged hypervolume at equal budget
+# (see BENCH_dse.json)
 DEFAULT_SAMPLERS: Tuple[str, ...] = ("nsga3", "nsga2", "tpe", "random")
 
 
 @dataclass
 class IslandConfig:
-    """Knobs of the island orchestrator (see docs/dse_guide.md).
+    """Knobs of the island fleet (see docs/dse_guide.md). `run_islands`
+    and `run_islands_ref` mirror these defaults.
 
     Attributes:
         n_islands:  number of concurrently-evolving islands.
         samplers:   per-island sampler names, cycled when shorter than
                     ``n_islands``; each of "nsga3" | "nsga2" | "tpe" |
-                    "random".
+                    "random". ``None`` (default) means a homogeneous
+                    ``("nsga3",) * n_islands`` fleet — with
+                    ``partition_refs`` this is cone-separated parallel
+                    NSGA-III, the strongest configuration measured
+                    (BENCH_dse.json). Fleets containing "tpe"/"random"
+                    run on the scalar path.
         epochs:     migration rounds: the generation budget is split into
-                    this many epochs, with ring migration (and a history
+                    this many epochs, with migration (and a history
                     entry) at each epoch boundary.
-        migrate_k:  Pareto elites each island exports per epoch. Keep this
-                    small (1-4): heavy migration homogenizes the islands
-                    and forfeits the diversity the model exists for.
+        migrate_k:  elites injected per epoch. Keep this small (1-4) and
+                    the epochs few: migrating often homogenizes the
+                    islands and forfeits the diversity the model exists
+                    for (measured: epoch-frequency sweeps lose 6-9% hv).
         pop:        per-island population size (equals the per-generation
                     evaluation batch of every island kind).
-        parallel:   step the islands of one generation in a thread pool
-                    (results are schedule-independent; see module
-                    docstring).
         partition_refs: when several ``nsga3`` islands run, give each a
                     distinct cone of the Das-Dennis reference rays
                     (argmax-objective partition) — cone-separated parallel
-                    NSGA-III. Inert for the default mixed fleet (one nsga3
+                    NSGA-III. Inert for the mixed fleet (one nsga3
                     island).
+        migration:  "broadcast" (default) — every island receives the
+                    top-``migrate_k`` scalarized members of the merged
+                    front; "ring" — each island sends its own archive
+                    elites to its right-hand neighbour (a no-op with one
+                    island).
+        nds_backend: batched non-domination ranking backend for the
+                    batched path: "numpy", "jax" (jitted, SPMD-sharded
+                    over the island axis, bit-identical to numpy), or
+                    "auto" (jax iff JAX is already imported and >1
+                    device is visible).
+        parallel:   `run_islands_ref` only — step the scalar islands of
+                    one generation in a thread pool (results are
+                    schedule-independent).
     """
     n_islands: int = 4
-    samplers: Sequence[str] = DEFAULT_SAMPLERS
+    samplers: Optional[Sequence[str]] = None
     epochs: int = 4
-    migrate_k: int = 2
+    migrate_k: int = 4
     pop: int = 16
-    parallel: bool = True
     partition_refs: bool = True
+    migration: str = "broadcast"
+    nds_backend: str = "auto"
+    parallel: bool = True
 
 
 def _island_seed(seed: int, island: int) -> int:
@@ -294,57 +334,249 @@ def _make_island(name: str, sizes: Sequence[int], pop: int, seed: int
 
 
 # --------------------------------------------------------------------------
-# orchestrator
+# batched fleet kernels
 # --------------------------------------------------------------------------
 
-def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
-                seed: int = 0, *, n_islands: int = 4,
-                samplers: Optional[Sequence[str]] = None, epochs: int = 4,
-                migrate_k: int = 2, pop: int = 16, parallel: bool = True,
-                partition_refs: bool = True) -> DSEResult:
-    """Run an island-model DSE; drop-in alternative to the serial samplers.
+def _dense_ranks(F: np.ndarray) -> np.ndarray:
+    """Per-column dense integer ranks of an (I, n, m) objective stack.
 
-    Args:
-        sizes:     per-dimension categorical cardinalities.
-        evaluate:  batch evaluator or `SurrogateEngine`; wrapped via
-                   `as_engine` and shared by every island.
-        budget:    total evaluation requests across all islands (same
-                   accounting as the serial samplers: every proposed
-                   config counts, engine cache hits included).
-        seed:      master seed; island seeds derive from (seed, island).
-        n_islands / samplers / epochs / migrate_k / pop / parallel /
-        partition_refs:
-                   see `IslandConfig`.
-
-    Returns:
-        `DSEResult` whose front is the merged global archive's
-        non-dominated set and whose ``history`` has one entry per epoch
-        (merged front size + hypervolume under an epoch-0-fixed reference,
-        plus per-island front sizes).
+    ``a[j] <= b[j]`` iff ``rank(a[j]) <= rank(b[j])`` (np.unique sorts
+    ascending and gives tied values the same rank), so Pareto domination
+    over the int32 ranks is EXACTLY domination over the floats. This lets
+    the JAX fleet kernel run in integer arithmetic: no float64->float32
+    truncation (the repo does not enable x64) and bit-identical fronts on
+    any backend or device count.
     """
-    cfg = IslandConfig(n_islands=n_islands,
-                       samplers=tuple(samplers or DEFAULT_SAMPLERS),
-                       epochs=epochs, migrate_k=migrate_k, pop=pop,
-                       parallel=parallel, partition_refs=partition_refs)
-    if cfg.n_islands < 1:
+    n_islands, n, m = F.shape
+    R = np.empty((n_islands, n, m), np.int32)
+    for b in range(n_islands):
+        for j in range(m):
+            R[b, :, j] = np.unique(F[b, :, j], return_inverse=True)[1]
+    return R
+
+
+_RANKS_JIT = None
+
+
+def _ranks_kernel_jax(R: np.ndarray) -> np.ndarray:
+    """Jitted batched front-peeling over int32 rank tensors, SPMD-sharded
+    over the island axis (`meshes.shard_leading_axis`). Every op is
+    island-local (the einsum contracts within each island), so sharding
+    adds zero communication and the result equals
+    `dse.non_dominated_ranks_batched` exactly."""
+    global _RANKS_JIT
+    import jax
+    import jax.numpy as jnp
+
+    if _RANKS_JIT is None:
+        def kern(R):
+            less = jnp.all(R[:, :, None, :] <= R[:, None, :, :], axis=-1)
+            D = (less & ~jnp.transpose(less, (0, 2, 1))).astype(jnp.int32)
+            dom = D.sum(1)
+
+            def cond(s):
+                return jnp.any(s[0] == 0)
+
+            def body(s):
+                dom, ranks, r = s
+                cur = dom == 0
+                ranks = jnp.where(cur, r, ranks)
+                dec = jnp.einsum("bij,bi->bj", D, cur.astype(jnp.int32))
+                return jnp.where(cur, -1, dom - dec), ranks, r + 1
+
+            init = (dom, jnp.full(dom.shape, -1, jnp.int32), jnp.int32(0))
+            return jax.lax.while_loop(cond, body, init)[1]
+
+        _RANKS_JIT = jax.jit(kern)
+
+    from repro.distributed import meshes as M
+    Rdev = M.shard_leading_axis(jnp.asarray(R), len(R), axis_name="island")
+    return np.asarray(_RANKS_JIT(Rdev), np.int64)
+
+
+def fleet_ranks(F: np.ndarray, backend: str = "auto") -> np.ndarray:
+    """Non-domination rank of every member of every island.
+
+    (I, n, m) objectives -> (I, n) int64 ranks, equal per island to the
+    front index assigned by `dse.non_dominated_sort`.
+
+    backend:
+      * "numpy" — `dse.non_dominated_ranks_batched` (no JAX involvement);
+      * "jax"   — integer-rank kernel, jitted and SPMD-sharded over the
+                  island axis (bit-identical to numpy; `_dense_ranks`);
+      * "auto"  — "jax" iff JAX is already imported in this process AND
+                  more than one device is visible, else "numpy" (a
+                  single-device run never pays JAX import/compile latency
+                  the numpy kernel makes unnecessary).
+    """
+    F = np.asarray(F, np.float64)
+    if backend not in ("auto", "numpy", "jax"):
+        raise ValueError(f"unknown nds_backend {backend!r}")
+    if backend == "auto":
+        jax_mod = sys.modules.get("jax")
+        backend = ("jax" if jax_mod is not None
+                   and len(jax_mod.devices()) > 1 else "numpy")
+    if backend == "numpy":
+        return non_dominated_ranks_batched(F)
+    return _ranks_kernel_jax(_dense_ranks(F))
+
+
+def _crossover_mutate_fleet(P: np.ndarray, sizes: Sequence[int],
+                            rngs: Sequence[np.random.Generator],
+                            p_mut: float = 0.15) -> np.ndarray:
+    """`dse._crossover_mutate` over a whole (I, pop, d) fleet at once.
+
+    RNG draws stay per-island in the reference call order (permutation,
+    per-pair swap masks, mutation matrix, per-dimension resample values),
+    so every island consumes exactly the stream it would consume under
+    `run_islands_ref`; only the swap/mutate arithmetic is batched over
+    the island axis.
+    """
+    n_islands, n, d = P.shape
+    n_pairs = len(range(0, n - 1, 2))
+    perms = np.stack([rng.permutation(n) for rng in rngs])
+    masks = (np.stack([rng.random((n_pairs, d)) for rng in rngs])
+             if n_pairs else np.zeros((n_islands, 0, d)))
+    mut = np.stack([rng.random((n, d)) for rng in rngs])
+    rand = np.stack([np.stack([rng.integers(0, s, n) for s in sizes], 1)
+                     for rng in rngs])
+    kids = P[np.arange(n_islands)[:, None], perms]
+    if n_pairs:
+        pairs = kids[:, :2 * n_pairs].reshape(n_islands, n_pairs, 2, d)
+        swap = (masks < 0.5)[:, :, None, :]
+        kids[:, :2 * n_pairs] = np.where(
+            swap, pairs[:, :, ::-1, :], pairs).reshape(
+                n_islands, 2 * n_pairs, d)
+    return np.where(mut < p_mut, rand, kids)
+
+
+def _select_from_ranks(ranks: np.ndarray, FR: np.ndarray, pop: int,
+                       isl: _NsgaIsland) -> np.ndarray:
+    """Environmental selection from precomputed non-domination ranks;
+    front-by-front fill plus niche/crowding on the cut front, exactly as
+    `_NsgaIsland.ingest` does from `non_dominated_sort` fronts."""
+    chosen: List[int] = []
+    for r in range(int(ranks.max()) + 1):
+        fr = np.where(ranks == r)[0]
+        if len(chosen) + len(fr) <= pop:
+            chosen += list(fr)
+        else:
+            need = pop - len(chosen)
+            if isl.variant == "nsga2":
+                order = np.argsort(-crowding_distance(FR[fr]))
+                chosen += list(fr[order[:need]])
+            else:
+                sel = _niche_select(FR[fr], need, isl.refs, isl.rng)
+                chosen += list(fr[sel])
+            break
+    return np.asarray(chosen)
+
+
+# --------------------------------------------------------------------------
+# orchestrators
+# --------------------------------------------------------------------------
+
+def _check_migration(migration: str) -> None:
+    if migration not in ("broadcast", "ring"):
+        raise ValueError(f"unknown migration {migration!r}")
+
+
+def _build_fleet(sizes, seed, n_islands, samplers, pop, partition_refs):
+    if n_islands < 1:
         raise ValueError("n_islands must be >= 1")
-    engine = as_engine(evaluate)
-    names = [cfg.samplers[i % len(cfg.samplers)]
-             for i in range(cfg.n_islands)]
-    islands = [_make_island(names[i], sizes, cfg.pop,
-                            _island_seed(seed, i))
-               for i in range(cfg.n_islands)]
+    names = [samplers[i % len(samplers)] for i in range(n_islands)]
+    islands = [_make_island(names[i], sizes, pop, _island_seed(seed, i))
+               for i in range(n_islands)]
     nsga3_islands = [isl for isl in islands
-                     if isinstance(isl, _NsgaIsland) and isl.variant == "nsga3"]
-    if cfg.partition_refs and len(nsga3_islands) >= 2:
+                     if isinstance(isl, _NsgaIsland)
+                     and isl.variant == "nsga3"]
+    if partition_refs and len(nsga3_islands) >= 2:
         for c, isl in enumerate(nsga3_islands):
             isl.cone = c
+    return names, islands
 
-    per_gen = cfg.n_islands * cfg.pop
+
+def _schedule(budget, n_islands, pop, epochs):
+    per_gen = n_islands * pop
     total_gens = max(1, -(-budget // per_gen))     # ceil: spend the budget
-    n_epochs = max(1, min(cfg.epochs, total_gens))
-    boundaries = {round((e + 1) * total_gens / n_epochs)
-                  for e in range(n_epochs)}
+    n_epochs = max(1, min(epochs, total_gens))
+    return total_gens, {round((e + 1) * total_gens / n_epochs)
+                        for e in range(n_epochs)}
+
+
+def _epoch_boundary(islands, names, migration, migrate_k, hv_ref, gen,
+                    evaluated, history):
+    """Shared epoch-boundary step of both orchestrators: merge the island
+    archives into the global front, migrate elites, append the history
+    entry. Returns (pc, po, hv_ref); `hv_ref` is fixed at the first
+    boundary so the per-epoch hypervolumes are comparable.
+
+    Migration moves (config, objective-row) pairs — it never re-spends
+    budget — and consumes no island RNG, so it cannot desynchronize the
+    batched/scalar random streams. Migrants are drawn from archives
+    already inside the merged set, so the returned merged front is the
+    same whether it is computed before or after the receives.
+    """
+    allX: List[Config] = []
+    allF: List[np.ndarray] = []
+    for isl in islands:
+        ax, af = isl.archive()
+        allX += ax
+        allF.append(af)
+    F = np.concatenate(allF, 0)
+    if hv_ref is None:
+        hv_ref = hv_reference(F)
+    pc, po = pareto_front(allX, F)
+    if migrate_k > 0:
+        if migration == "broadcast":
+            # global elite broadcast: every island receives the
+            # top-migrate_k scalarized members of the MERGED front.
+            # Measured strictly stronger than ring-neighbour elites on
+            # the library-proxy spaces (BENCH_dse.json).
+            sl = np.argsort(_scalarize(po), kind="stable")[:migrate_k]
+            mx, mf = [pc[j] for j in sl], po[sl]
+            for isl in islands:
+                isl.receive(mx, mf)
+        elif len(islands) > 1:
+            # ring: i sends its own archive elites to (i+1) mod N; with a
+            # single island the self-send is skipped (pure no-op)
+            outbox = [isl.elites(migrate_k) for isl in islands]
+            for i, (mx, mf) in enumerate(outbox):
+                islands[(i + 1) % len(islands)].receive(mx, mf)
+    per_island = {}
+    for i, isl in enumerate(islands):
+        ax, af = isl.archive()
+        per_island[f"{i}:{names[i]}"] = len(pareto_front(ax, af)[0])
+    history.append({"generation": gen, "evaluated": evaluated,
+                    "front_size": len(pc),
+                    "hypervolume": hypervolume(po, hv_ref),
+                    "islands": per_island})
+    return pc, po, hv_ref
+
+
+def run_islands_ref(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+                    seed: int = 0, *, n_islands: int = 4,
+                    samplers: Optional[Sequence[str]] = None,
+                    epochs: int = 4, migrate_k: int = 4, pop: int = 16,
+                    parallel: bool = True, partition_refs: bool = True,
+                    migration: str = "broadcast") -> DSEResult:
+    """Scalar island orchestrator: per-island state machines stepped one
+    generation at a time (optionally in a thread pool — results are
+    schedule-independent because islands only interact at the epoch
+    barrier).
+
+    This is the PARITY ORACLE for the batched `run_islands`: same
+    algorithm, same per-island RNG streams, same merged front and
+    hypervolume trajectory (asserted in tests/test_islands_batched.py).
+    It is also the execution path for fleets containing the sequential
+    ``tpe``/``random`` samplers.
+    """
+    _check_migration(migration)
+    samplers = tuple(samplers) if samplers else ("nsga3",) * n_islands
+    names, islands = _build_fleet(sizes, seed, n_islands, samplers, pop,
+                                  partition_refs)
+    engine = as_engine(evaluate)
+    total_gens, boundaries = _schedule(budget, n_islands, pop, epochs)
 
     history: List[Dict] = []
     evaluated = 0
@@ -357,43 +589,125 @@ def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         isl.ingest(engine(X))
         return len(X)
 
-    pool = (ThreadPoolExecutor(max_workers=cfg.n_islands)
-            if cfg.parallel and cfg.n_islands > 1 else None)
+    pool = (ThreadPoolExecutor(max_workers=n_islands)
+            if parallel and n_islands > 1 else None)
     try:
         for gen in range(1, total_gens + 1):
             if pool is not None:
                 evaluated += sum(pool.map(step, islands))
             else:
                 evaluated += sum(step(isl) for isl in islands)
-
-            if gen not in boundaries:
-                continue
-            # ring migration: i sends its elites (with objective rows —
-            # no re-evaluation) to (i+1) mod N
-            outbox = [isl.elites(cfg.migrate_k) for isl in islands]
-            for i, (mx, mf) in enumerate(outbox):
-                islands[(i + 1) % cfg.n_islands].receive(mx, mf)
-
-            allX: List[Config] = []
-            allF: List[np.ndarray] = []
-            per_island = {}
-            for i, isl in enumerate(islands):
-                ax, af = isl.archive()
-                allX += ax
-                allF.append(af)
-                fx, _ = pareto_front(ax, af)
-                per_island[f"{i}:{names[i]}"] = len(fx)
-            F = np.concatenate(allF, 0)
-            if hv_ref is None:
-                hv_ref = hv_reference(F)
-            pc, po = pareto_front(allX, F)
-            history.append({"generation": gen, "evaluated": evaluated,
-                            "front_size": len(pc),
-                            "hypervolume": hypervolume(po, hv_ref),
-                            "islands": per_island})
+            if gen in boundaries:
+                pc, po, hv_ref = _epoch_boundary(
+                    islands, names, migration, migrate_k, hv_ref, gen,
+                    evaluated, history)
     finally:
         if pool is not None:
             pool.shutdown()
+
+    # the final generation is always an epoch boundary, so (pc, po) is the
+    # merged global front over every island archive
+    return DSEResult(pc, po, evaluated, history=history,
+                     stats=engine.stats.as_dict())
+
+
+def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+                seed: int = 0, *, n_islands: int = 4,
+                samplers: Optional[Sequence[str]] = None, epochs: int = 4,
+                migrate_k: int = 4, pop: int = 16,
+                partition_refs: bool = True, migration: str = "broadcast",
+                nds_backend: str = "auto") -> DSEResult:
+    """Run the island-model DSE as one batched array program; drop-in
+    alternative to the serial samplers.
+
+    Per generation the whole fleet advances as tensors: crossover/
+    mutation on the ``(n_islands, pop, n_units)`` population stack
+    (`_crossover_mutate_fleet`), ONE fused `SurrogateEngine` call on the
+    ``(n_islands*pop, n_units)`` proposal block, batched non-domination
+    ranking (`fleet_ranks` — NumPy, or the jitted JAX kernel SPMD-sharded
+    across host devices), then per-island niche/crowding on the small cut
+    fronts. Elite migration happens at epoch boundaries only
+    (`_epoch_boundary`). No threads, no per-island Python evolution loop.
+
+    Fleets containing ``tpe``/``random`` islands delegate to
+    `run_islands_ref` (sequential stepping, identical results).
+
+    Args:
+        sizes:     per-dimension categorical cardinalities.
+        evaluate:  batch evaluator or `SurrogateEngine`; wrapped via
+                   `as_engine` and shared by every island.
+        budget:    total evaluation requests across all islands (same
+                   accounting as the serial samplers: every proposed
+                   config counts, engine cache hits included).
+        seed:      master seed; island seeds derive from (seed, island).
+        n_islands / samplers / epochs / migrate_k / pop / partition_refs
+        / migration / nds_backend:
+                   see `IslandConfig`.
+
+    Returns:
+        `DSEResult` whose front is the merged global archive's
+        non-dominated set and whose ``history`` has one entry per epoch
+        (merged front size + hypervolume under an epoch-0-fixed reference,
+        plus per-island front sizes).
+    """
+    _check_migration(migration)
+    if nds_backend not in ("auto", "numpy", "jax"):
+        raise ValueError(f"unknown nds_backend {nds_backend!r}")
+    samplers = tuple(samplers) if samplers else ("nsga3",) * n_islands
+    names, islands = _build_fleet(sizes, seed, n_islands, samplers, pop,
+                                  partition_refs)
+    if any(not isinstance(isl, _NsgaIsland) for isl in islands):
+        return run_islands_ref(
+            sizes, evaluate, budget, seed, n_islands=n_islands,
+            samplers=samplers, epochs=epochs, migrate_k=migrate_k,
+            pop=pop, parallel=False, partition_refs=partition_refs,
+            migration=migration)
+    engine = as_engine(evaluate)
+    total_gens, boundaries = _schedule(budget, n_islands, pop, epochs)
+    d = len(sizes)
+
+    history: List[Dict] = []
+    evaluated = 0
+    hv_ref: Optional[np.ndarray] = None
+    pc: List[Config] = []
+    po = np.zeros((0, 1))
+
+    for gen in range(1, total_gens + 1):
+        first = islands[0].P is None
+        if first:
+            # generation 1 proposes raw randoms (no freshen), like the
+            # scalar _NsgaIsland.propose
+            Q = np.stack([isl._randoms(pop) for isl in islands])
+        else:
+            P = np.stack([isl.P for isl in islands])
+            kids = _crossover_mutate_fleet(
+                P, sizes, [isl.rng for isl in islands])
+            Q = np.stack([isl._freshen(kids[i])
+                          for i, isl in enumerate(islands)])
+        # ONE fused evaluation for the whole fleet; the engine memo makes
+        # this value-identical to per-island calls
+        FQ = np.asarray(
+            engine([tuple(r) for r in Q.reshape(-1, d)]),
+            np.float64).reshape(n_islands, pop, -1)
+        evaluated += n_islands * pop
+        if first:
+            for i, isl in enumerate(islands):
+                isl._Q = Q[i]
+                isl.ingest(FQ[i])      # init path: sets P/F/refs + cone
+        else:
+            for i, isl in enumerate(islands):
+                isl._archive([tuple(r) for r in Q[i]], FQ[i])
+            R = np.concatenate([P, Q], 1)
+            FR = np.concatenate(
+                [np.stack([isl.F for isl in islands]), FQ], 1)
+            ranks = fleet_ranks(FR, backend=nds_backend)
+            for i, isl in enumerate(islands):
+                idx = _select_from_ranks(ranks[i], FR[i], pop, isl)
+                isl.P, isl.F = R[i][idx], FR[i][idx]
+        if gen in boundaries:
+            pc, po, hv_ref = _epoch_boundary(
+                islands, names, migration, migrate_k, hv_ref, gen,
+                evaluated, history)
 
     # the final generation is always an epoch boundary, so (pc, po) is the
     # merged global front over every island archive

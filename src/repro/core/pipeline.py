@@ -64,8 +64,10 @@ class PipelineConfig:
     epochs: int = 30
     dse_budget: int = 2000
     dse_pop: int = 64
-    sampler: str = "nsga3"          # nsga3 | nsga2 | tpe | random | islands
+    sampler: str = "nsga3"          # nsga3 | nsga2 | tpe | random |
+                                    # islands | islands_ref
     dse_islands: int = 4            # island count for sampler="islands"
+    dse_migrate_k: int = 4          # merged-front elites broadcast per epoch
     seed: int = 0
     use_critical_path: bool = True
     surrogate: str = "gnn"          # gnn | rf | oracle
@@ -164,7 +166,8 @@ def _engine_spec(cfg: PipelineConfig) -> Dict:
 def _search_spec(cfg: PipelineConfig) -> Dict:
     return {"engine": _engine_spec(cfg), "sampler": cfg.sampler,
             "dse_budget": cfg.dse_budget, "dse_pop": cfg.dse_pop,
-            "dse_islands": cfg.dse_islands, "seed": cfg.seed}
+            "dse_islands": cfg.dse_islands,
+            "dse_migrate_k": cfg.dse_migrate_k, "seed": cfg.seed}
 
 
 def default_store(cfg: PipelineConfig) -> ArtifactStore:
@@ -316,10 +319,11 @@ def stage_search(cfg: PipelineConfig, store: ArtifactStore,
     def build() -> dse.DSEResult:
         sizes = [len(ctx.entries[n.kind]) for n in ctx.app.unit_nodes]
         sampler = dse.SAMPLERS[cfg.sampler]
-        if cfg.sampler == "islands":
+        if cfg.sampler in ("islands", "islands_ref"):
             # dse_pop is the *global* population; islands split it evenly
             return sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
                            n_islands=cfg.dse_islands,
+                           migrate_k=cfg.dse_migrate_k,
                            pop=max(2, cfg.dse_pop // cfg.dse_islands))
         if cfg.sampler.startswith("nsga"):
             return sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,

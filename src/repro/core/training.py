@@ -147,23 +147,10 @@ def _shard_members(tree, n_members: int):
     Member programs are fully independent (no cross-member ops), so SPMD
     partitioning the leading axis runs members in parallel across devices
     with ZERO communication — per-member results stay bit-identical to
-    the unsharded run. Uses the largest device prefix that divides
-    `n_members`; a no-op on one device."""
-    devs = jax.devices()
-    k = 0
-    for d in range(min(len(devs), n_members), 0, -1):
-        if n_members % d == 0:
-            k = d
-            break
-    if k <= 1:
-        return tree
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-    mesh = Mesh(np.asarray(devs[:k]), ("member",))
-
-    def one(a):
-        spec = P(*(("member",) + (None,) * (a.ndim - 1)))
-        return jax.device_put(a, NamedSharding(mesh, spec))
-    return jax.tree.map(one, tree)
+    the unsharded run. Delegates to `meshes.shard_leading_axis` (shared
+    with the island DSE fleet); a no-op on one device."""
+    from repro.distributed import meshes as M
+    return M.shard_leading_axis(tree, n_members, axis_name="member")
 
 
 def _plan_for(tc: TrainConfig, n: int, bs: int):

@@ -151,12 +151,18 @@ def test_islands_registered_as_sampler():
 
 
 def test_islands_deterministic_and_schedule_independent():
-    """Same seed -> identical result; threaded == sequential stepping."""
+    """Same seed -> identical result; batched == threaded == sequential
+    scalar stepping (the full parity harness lives in
+    tests/test_islands_batched.py)."""
     kw = dict(n_islands=4, pop=8, epochs=3, migrate_k=2)
     a = run_islands([10] * 6, _toy_eval, 192, seed=5, **kw)
     b = run_islands([10] * 6, _toy_eval, 192, seed=5, **kw)
-    c = run_islands([10] * 6, _toy_eval, 192, seed=5, parallel=False, **kw)
-    assert a.pareto_configs == b.pareto_configs == c.pareto_configs
+    c = islands_lib.run_islands_ref([10] * 6, _toy_eval, 192, seed=5,
+                                    parallel=True, **kw)
+    d = islands_lib.run_islands_ref([10] * 6, _toy_eval, 192, seed=5,
+                                    parallel=False, **kw)
+    assert a.pareto_configs == b.pareto_configs == c.pareto_configs \
+        == d.pareto_configs
     np.testing.assert_array_equal(a.pareto_objs, c.pareto_objs)
     assert [e["front_size"] for e in a.history] == \
         [e["front_size"] for e in c.history]
@@ -187,6 +193,10 @@ def test_islands_rejects_bad_args():
         run_islands([4] * 3, _toy_eval, 32, n_islands=0)
     with pytest.raises(ValueError):
         run_islands([4] * 3, _toy_eval, 32, samplers=("bogus",))
+    with pytest.raises(ValueError):
+        run_islands([4] * 3, _toy_eval, 32, migration="teleport")
+    with pytest.raises(ValueError):
+        run_islands([4] * 3, _toy_eval, 32, nds_backend="fortran")
 
 
 # --------------------------------------------------------------------------

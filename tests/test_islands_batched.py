@@ -1,0 +1,228 @@
+"""Parity, determinism, and migration edge cases of the batched island
+fleet (`islands.run_islands`) against the scalar oracle
+(`islands.run_islands_ref`).
+
+The batched program and the scalar state machines consume identical
+per-island RNG streams and share the epoch-boundary code, so EVERYTHING
+observable must match exactly: merged Pareto configs/objectives, the
+per-epoch hypervolume trajectory, per-island front sizes, and the budget
+accounting. The JAX rank kernel works on exact integer ranks
+(`islands._dense_ranks`), so results must also be bit-identical between
+the numpy backend, the jax backend, and a forced 8-device host
+(`XLA_FLAGS=--xla_force_host_platform_device_count=8`).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.core import islands as islands_lib
+from repro.core.islands import run_islands, run_islands_ref
+
+SPACE = [10] * 6
+
+
+def _toy_eval(configs):
+    a = np.asarray(configs, np.float64)
+    return np.stack([a.sum(1), 9 * 6 - a.sum(1) + a.std(1), a.max(1)], 1)
+
+
+def _assert_same(a, b):
+    assert a.pareto_configs == b.pareto_configs
+    np.testing.assert_array_equal(a.pareto_objs, b.pareto_objs)
+    assert a.evaluated == b.evaluated
+    assert [e["hypervolume"] for e in a.history] == \
+        [e["hypervolume"] for e in b.history]
+    assert [e["front_size"] for e in a.history] == \
+        [e["front_size"] for e in b.history]
+    assert [e["islands"] for e in a.history] == \
+        [e["islands"] for e in b.history]
+
+
+# --------------------------------------------------------------------------
+# batched == scalar reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(n_islands=4, pop=8, epochs=4, migrate_k=4),
+    dict(n_islands=4, pop=8, epochs=4, migrate_k=2, migration="ring"),
+    dict(n_islands=3, pop=8, epochs=3, migrate_k=2,
+         samplers=("nsga2",) * 3),
+    dict(n_islands=4, pop=8, epochs=4, migrate_k=4, partition_refs=False),
+    dict(n_islands=2, pop=5, epochs=3, migrate_k=2),      # odd pop
+    dict(n_islands=4, pop=8, epochs=4, migrate_k=0),      # no migration
+], ids=["broadcast", "ring", "nsga2", "no-cones", "odd-pop", "no-mig"])
+def test_batched_matches_scalar_reference(kw):
+    """Acceptance: same merged front and hypervolume trajectory as the
+    threaded/scalar reference at equal seeds and budget."""
+    a = run_islands(SPACE, _toy_eval, 256, seed=3, **kw)
+    b = run_islands_ref(SPACE, _toy_eval, 256, seed=3, **kw)
+    _assert_same(a, b)
+
+
+def test_batched_deterministic():
+    kw = dict(n_islands=4, pop=8, epochs=4, migrate_k=4)
+    a = run_islands(SPACE, _toy_eval, 256, seed=9, **kw)
+    b = run_islands(SPACE, _toy_eval, 256, seed=9, **kw)
+    _assert_same(a, b)
+
+
+def test_mixed_fleet_delegates_to_scalar_path():
+    """tpe/random islands cannot be batched; run_islands must still give
+    exactly the reference result (sequential delegation)."""
+    kw = dict(n_islands=4, pop=8, epochs=3, migrate_k=3,
+              samplers=("nsga3", "nsga2", "tpe", "random"))
+    a = run_islands(SPACE, _toy_eval, 256, seed=6, **kw)
+    b = run_islands_ref(SPACE, _toy_eval, 256, seed=6, parallel=True, **kw)
+    _assert_same(a, b)
+
+
+def test_numpy_and_jax_backends_bit_identical():
+    kw = dict(n_islands=4, pop=8, epochs=4, migrate_k=4)
+    a = run_islands(SPACE, _toy_eval, 256, seed=0, nds_backend="numpy", **kw)
+    b = run_islands(SPACE, _toy_eval, 256, seed=0, nds_backend="jax", **kw)
+    _assert_same(a, b)
+
+
+def test_fused_evaluation_one_block_per_generation():
+    """The batched fleet must hit the engine with ONE fused
+    (n_islands*pop) block per generation — that is the contract that
+    makes surrogate inference batch-efficient."""
+    from repro.core.engine import SurrogateEngine
+
+    eng = SurrogateEngine(_toy_eval, chunk_size=4096)
+    run_islands(SPACE, eng, 256, seed=0, n_islands=4, pop=8, epochs=4,
+                migrate_k=4)
+    assert eng.stats.max_batch == 4 * 8
+    assert eng.stats.calls == 256 // (4 * 8)
+
+
+# --------------------------------------------------------------------------
+# migration edge cases (each vs the scalar reference)
+# --------------------------------------------------------------------------
+
+def test_single_island_ring_is_noop():
+    """With one island, ring migration has no neighbour: results must be
+    identical to migrate_k=0 — and to the scalar reference."""
+    kw = dict(n_islands=1, pop=16, epochs=4)
+    ring = run_islands(SPACE, _toy_eval, 128, seed=4, migrate_k=4,
+                       migration="ring", **kw)
+    none = run_islands(SPACE, _toy_eval, 128, seed=4, migrate_k=0,
+                       migration="ring", **kw)
+    _assert_same(ring, none)
+    _assert_same(ring, run_islands_ref(SPACE, _toy_eval, 128, seed=4,
+                                       migrate_k=4, migration="ring", **kw))
+
+
+def test_single_island_broadcast_matches_reference():
+    """Broadcast with one island is NOT a no-op (merged-front elites
+    re-enter the population) — but it must still match the oracle."""
+    kw = dict(n_islands=1, pop=16, epochs=4, migrate_k=4)
+    a = run_islands(SPACE, _toy_eval, 128, seed=4, **kw)
+    b = run_islands_ref(SPACE, _toy_eval, 128, seed=4, **kw)
+    _assert_same(a, b)
+
+
+@pytest.mark.parametrize("migration", ["broadcast", "ring"])
+def test_elite_count_exceeds_population(migration):
+    """migrate_k larger than the receiving population: the splice clips
+    at pop rows, identically in both implementations."""
+    kw = dict(n_islands=2, pop=4, epochs=4, migrate_k=9,
+              migration=migration)
+    a = run_islands(SPACE, _toy_eval, 128, seed=5, **kw)
+    b = run_islands_ref(SPACE, _toy_eval, 128, seed=5, **kw)
+    _assert_same(a, b)
+
+
+def test_empty_archive_elites_and_receive_are_noops():
+    """An island that has evaluated nothing exports no elites, and an
+    empty migrant batch must not disturb the receiver (the 'empty-front
+    epoch' edge: a boundary where nothing migrates)."""
+    isl = islands_lib._make_island("nsga3", [4] * 3, 4,
+                                   islands_lib._island_seed(0, 0))
+    mx, mf = isl.elites(3)
+    assert mx == [] and len(mf) == 0
+    isl.receive(mx, mf)                       # must not raise or archive
+    assert isl.arch_X == [] and isl.arch_F == []
+
+
+def test_duplicate_elites_in_receiver_archive():
+    """Broadcasting the same elites twice (duplicates landing in the
+    receiver's archive) must not change the merged front — pareto_front
+    dedupes on objective rows — and must match the scalar receive."""
+    rng = np.random.default_rng(0)
+    a = islands_lib._make_island("nsga3", [6] * 4, 6,
+                                 islands_lib._island_seed(1, 0))
+    b = islands_lib._make_island("nsga3", [6] * 4, 6,
+                                 islands_lib._island_seed(1, 0))
+    X = [tuple(int(v) for v in rng.integers(0, 6, 4)) for _ in range(6)]
+    F = _toy_eval([c + (0, 0) for c in X])[:, :2]
+    for isl in (a, b):
+        isl._Q = np.asarray(X)
+        isl.ingest(F)
+    mig_X, mig_F = X[:2], F[:2]
+    a.receive(mig_X, mig_F)                   # once
+    b.receive(mig_X, mig_F)                   # twice: duplicates
+    b.receive(mig_X, mig_F)
+    fa = dse.pareto_front(*a.archive())
+    fb = dse.pareto_front(*b.archive())
+    assert fa[0] == fb[0]
+    np.testing.assert_array_equal(fa[1], fb[1])
+    np.testing.assert_array_equal(a.P, b.P)   # resident splice identical
+
+
+# --------------------------------------------------------------------------
+# device-count invariance (forced 8-device host, subprocess)
+# --------------------------------------------------------------------------
+
+_DEVICE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+    import json
+    import numpy as np
+    import jax
+    from repro.core.islands import run_islands
+
+    def toy(configs):
+        a = np.asarray(configs, np.float64)
+        return np.stack([a.sum(1), 9 * 6 - a.sum(1) + a.std(1),
+                         a.max(1)], 1)
+
+    res = run_islands([10] * 6, toy, 256, seed=0, n_islands=4, pop=8,
+                      epochs=4, migrate_k=4, nds_backend="jax")
+    print(json.dumps({
+        "devices": jax.device_count(),
+        "front": [list(map(int, c)) for c in res.pareto_configs],
+        "hv": [e["hypervolume"] for e in res.history],
+    }))
+""")
+
+
+def _run_with_devices(n):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", _DEVICE_SCRIPT % n],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def test_bit_identical_across_1_and_8_devices():
+    """Acceptance: the sharded jax rank kernel gives bit-identical search
+    results on 1 device and a forced 8-device host mesh."""
+    one = _run_with_devices(1)
+    eight = _run_with_devices(8)
+    assert one["devices"] == 1 and eight["devices"] == 8
+    assert one["front"] == eight["front"]
+    assert one["hv"] == eight["hv"]
+    # ... and both match the in-process numpy-backend run exactly
+    local = run_islands(SPACE, _toy_eval, 256, seed=0, n_islands=4, pop=8,
+                        epochs=4, migrate_k=4, nds_backend="numpy")
+    assert [list(map(int, c)) for c in local.pareto_configs] == one["front"]
+    assert [e["hypervolume"] for e in local.history] == one["hv"]

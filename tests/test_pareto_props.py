@@ -1,0 +1,169 @@
+"""Hypothesis property tests for the Pareto kernels of `repro.core.dse`.
+
+The batched island fleet and the archive merge both stand on three
+kernels: `pareto_mask` (+ its blockwise divide-and-conquer variant used
+for million-row archives), `non_dominated_sort`, and the flat
+`non_dominated_ranks` consumed by `islands.fleet_ranks`. Each is checked
+here against a brute-force O(n²) definition on adversarial instances —
+duplicate rows, fully-dominated sets, single-point fronts, discretized
+(tie-heavy) objectives — and for the invariances the search layer relies
+on (permutation equivariance, blockwise == flat for ANY block size).
+
+Runs under the real `hypothesis` package when installed, else under the
+deterministic fallback shim in tests/conftest.py.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dse
+
+
+# --------------------------------------------------------------------------
+# instance generation (seed-driven so the shim stays deterministic)
+# --------------------------------------------------------------------------
+
+_SCENARIOS = ("random", "duplicates", "all_dominated", "single_point",
+              "discrete", "one_column")
+
+
+def _instance(n, m, seed, scenario):
+    rng = np.random.default_rng(seed)
+    F = rng.random((n, m))
+    if scenario == "duplicates" and n >= 2:
+        # half the rows are copies of earlier rows
+        src = rng.integers(0, n, n // 2)
+        dst = rng.integers(0, n, n // 2)
+        F[dst] = F[src]
+    elif scenario == "all_dominated":
+        # row 0 dominates everything else
+        F[0] = 0.0
+        F[1:] += 1.0
+    elif scenario == "single_point":
+        F = np.repeat(F[:1], n, 0)
+    elif scenario == "discrete":
+        F = np.round(F * 3) / 3          # heavy per-column ties
+    elif scenario == "one_column":
+        F[:, 1:] = 0.5                   # domination decided by column 0
+    return F
+
+
+def _brute_mask(F):
+    n = len(F)
+    out = np.ones(n, bool)
+    for i in range(n):
+        for j in range(n):
+            if i != j and np.all(F[j] <= F[i]) and np.any(F[j] < F[i]):
+                out[i] = False
+                break
+    return out
+
+
+def _brute_ranks(F):
+    """Front index by repeated brute-force front removal."""
+    n = len(F)
+    ranks = np.full(n, -1)
+    alive = np.ones(n, bool)
+    r = 0
+    while alive.any():
+        idx = np.where(alive)[0]
+        front = idx[_brute_mask(F[idx])]
+        ranks[front] = r
+        alive[front] = False
+        r += 1
+    return ranks
+
+
+# --------------------------------------------------------------------------
+# pareto_mask / blockwise pareto_mask
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 48), st.integers(2, 5), st.integers(0, 10_000),
+       st.sampled_from(_SCENARIOS))
+def test_pareto_mask_matches_brute_force(n, m, seed, scenario):
+    F = _instance(n, m, seed, scenario)
+    assert np.array_equal(dse.pareto_mask(F), _brute_mask(F))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 96), st.integers(2, 5), st.integers(0, 10_000),
+       st.sampled_from(_SCENARIOS), st.integers(1, 40))
+def test_pareto_mask_blockwise_equals_flat(n, m, seed, scenario, block):
+    """The divide-and-conquer cull is exact for EVERY chunk size: a
+    dominated point is always dominated by some global front member
+    (transitivity), so chunk fronts + one cross-chunk cull lose nothing."""
+    F = _instance(n, m, seed, scenario)
+    assert np.array_equal(dse.pareto_mask_blockwise(F, block=block),
+                          dse.pareto_mask(F))
+
+
+def test_pareto_mask_empty():
+    assert dse.pareto_mask(np.zeros((0, 3))).shape == (0,)
+    assert dse.pareto_mask_blockwise(np.zeros((0, 3)), block=4).shape == (0,)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 4), st.integers(0, 10_000))
+def test_pareto_mask_permutation_equivariant(n, m, seed):
+    F = _instance(n, m, seed, "random")
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    assert np.array_equal(dse.pareto_mask(F)[perm], dse.pareto_mask(F[perm]))
+
+
+# --------------------------------------------------------------------------
+# non-dominated sorting / batched ranks
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 5), st.integers(0, 10_000),
+       st.sampled_from(_SCENARIOS))
+def test_ranks_match_brute_force(n, m, seed, scenario):
+    F = _instance(n, m, seed, scenario)
+    ranks = dse.non_dominated_ranks(F)
+    assert np.array_equal(ranks, _brute_ranks(F))
+    # ... and agree with the front decomposition of non_dominated_sort
+    for r, fr in enumerate(dse.non_dominated_sort(F)):
+        assert np.array_equal(np.where(ranks == r)[0], fr)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 5), st.integers(0, 10_000))
+def test_sort_ranks_permutation_invariant(n, m, seed):
+    """Shuffling the rows permutes the rank vector but never changes any
+    point's front index."""
+    F = _instance(n, m, seed, "random")
+    ranks = dse.non_dominated_ranks(F)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    assert np.array_equal(dse.non_dominated_ranks(F[perm]), ranks[perm])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 24), st.integers(2, 4), st.integers(0, 10_000),
+       st.integers(1, 5))
+def test_batched_ranks_match_per_island(n, m, seed, n_islands):
+    """(I, n, m) lockstep peeling == independent per-island ranking."""
+    rng = np.random.default_rng(seed)
+    Fb = rng.random((n_islands, n, m))
+    Fb[0] = _instance(n, m, seed, "duplicates")      # tie-heavy island
+    rb = dse.non_dominated_ranks_batched(Fb)
+    for b in range(n_islands):
+        assert np.array_equal(rb[b], dse.non_dominated_ranks(Fb[b]))
+
+
+# --------------------------------------------------------------------------
+# fleet_ranks backends (numpy vs jax integer-rank kernel)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 4), st.integers(0, 1000),
+       st.sampled_from(("random", "duplicates", "discrete")))
+def test_fleet_ranks_jax_bit_identical_to_numpy(n, m, seed, scenario):
+    from repro.core import islands as islands_lib
+
+    rng = np.random.default_rng(seed)
+    Fb = np.stack([_instance(n, m, seed + b, scenario) for b in range(3)])
+    Fb[1] = rng.random((n, m))
+    a = islands_lib.fleet_ranks(Fb, backend="numpy")
+    b = islands_lib.fleet_ranks(Fb, backend="jax")
+    assert np.array_equal(a, b)
