@@ -9,7 +9,9 @@ throughput, see benchmarks/engine_bench.py), dataset (batched-vs-loop
 labeling throughput, see benchmarks/dataset_bench.py), train (vmapped
 ensemble vs sequential loop fits, see benchmarks/train_bench.py),
 pipeline (staged cold vs cached-resume + unified-vs-per-app surrogate
-fits, see benchmarks/pipeline_bench.py).
+fits, see benchmarks/pipeline_bench.py), serve (cross-request batching
+vs serial request handling in the evaluation daemon, see
+benchmarks/serve_bench.py).
 """
 from __future__ import annotations
 
@@ -40,7 +42,7 @@ def main() -> None:
                     help="smaller datasets/epochs")
     ap.add_argument("--sections", default="tables,models,dse,kernels,lm,"
                                           "roofline,bridge,engine,dataset,"
-                                          "train,pipeline")
+                                          "train,pipeline,serve")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as T
@@ -84,6 +86,9 @@ def main() -> None:
     if "pipeline" in sections:
         from benchmarks import pipeline_bench
         _run_gated_bench("pipeline_bench", pipeline_bench.main, args.quick)
+    if "serve" in sections:
+        from benchmarks import serve_bench
+        _run_gated_bench("serve_bench", serve_bench.main, args.quick)
     print(f"# total benchmark time: {time.time() - t0:.1f}s")
 
 

@@ -33,6 +33,7 @@ import json
 import os
 import pickle
 import tempfile
+import threading
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -72,18 +73,28 @@ def stable_hash(obj: Any, n_hex: int = 16) -> str:
 @dataclass
 class StoreStats:
     """Per-stage cache counters (`hits[stage]`, `misses[stage]`) plus the
-    ordered event log the cache-resume tests assert on."""
+    ordered event log the cache-resume tests assert on.
+
+    Thread-safe: `record` holds an internal lock, so the dict
+    read-modify-write (``d[stage] = d.get(stage, 0) + 1``) cannot lose
+    counts when many serving sessions hit one resident store; `as_dict`
+    snapshots both dicts under the same lock."""
     hits: Dict[str, int] = field(default_factory=dict)
     misses: Dict[str, int] = field(default_factory=dict)
     events: list = field(default_factory=list)   # (stage, "hit"|"miss", key)
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
     def record(self, stage: str, hit: bool, key: str) -> None:
-        d = self.hits if hit else self.misses
-        d[stage] = d.get(stage, 0) + 1
-        self.events.append((stage, "hit" if hit else "miss", key))
+        with self._lock:
+            d = self.hits if hit else self.misses
+            d[stage] = d.get(stage, 0) + 1
+            self.events.append((stage, "hit" if hit else "miss", key))
 
     def as_dict(self) -> Dict[str, Dict[str, int]]:
-        return {"hits": dict(self.hits), "misses": dict(self.misses)}
+        with self._lock:
+            return {"hits": dict(self.hits), "misses": dict(self.misses)}
 
 
 def _to_numpy_tree(obj: Any) -> Any:
@@ -116,6 +127,22 @@ class ArtifactStore:
             self.root.mkdir(parents=True, exist_ok=True)
         self._memory: Dict[str, Any] = {}
         self.stats = StoreStats()
+        # concurrency: `_mem_lock` guards the memory tier; `_key_locks`
+        # serializes writers/builders per key, so `get_or_build` races on
+        # ONE key collapse to a single build (the rest become hits) while
+        # disjoint keys proceed fully in parallel. Disk writes stay
+        # atomic (tempfile + os.replace) regardless, so a reader racing a
+        # writer sees either the old or the new complete pickle — never a
+        # torn one (tests/test_artifacts_concurrent.py).
+        self._mem_lock = threading.Lock()
+        self._key_locks: Dict[str, threading.RLock] = {}
+
+    def _key_lock(self, key: str) -> threading.RLock:
+        with self._mem_lock:
+            lock = self._key_locks.get(key)
+            if lock is None:
+                lock = self._key_locks[key] = threading.RLock()
+            return lock
 
     # -- keys --------------------------------------------------------------
 
@@ -130,51 +157,63 @@ class ArtifactStore:
         return self.root / f"{key}.pkl" if self.root is not None else None
 
     def has(self, key: str) -> bool:
-        if key in self._memory:
-            return True
+        with self._mem_lock:
+            if key in self._memory:
+                return True
         p = self._path(key)
         return p is not None and p.exists()
 
     def get(self, key: str) -> Any:
-        if key in self._memory:
-            return self._memory[key]
+        with self._mem_lock:
+            if key in self._memory:
+                return self._memory[key]
         p = self._path(key)
         if p is not None and p.exists():
+            # `os.replace` publishes pickles atomically, so this read sees
+            # a complete file even mid-overwrite by a concurrent writer
             with open(p, "rb") as f:
                 obj = pickle.load(f)
-            self._memory[key] = obj
+            with self._mem_lock:
+                # first load wins: every caller then shares one object
+                obj = self._memory.setdefault(key, obj)
             return obj
         raise KeyError(key)
 
     def put(self, key: str, obj: Any, *, memory_only: bool = False) -> Any:
-        self._memory[key] = obj
-        p = self._path(key)
-        if p is not None and not memory_only:
-            disk_obj = _to_numpy_tree(obj)
-            # atomic write: a crashed run must not leave a torn pickle
-            fd, tmp = tempfile.mkstemp(dir=str(self.root),
-                                       prefix=f".{key}.")
-            try:
-                with os.fdopen(fd, "wb") as f:
-                    pickle.dump(disk_obj, f, protocol=4)
-                os.replace(tmp, p)
-            except BaseException:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
+        with self._key_lock(key):
+            with self._mem_lock:
+                self._memory[key] = obj
+            p = self._path(key)
+            if p is not None and not memory_only:
+                disk_obj = _to_numpy_tree(obj)
+                # atomic write: a crashed run must not leave a torn pickle
+                fd, tmp = tempfile.mkstemp(dir=str(self.root),
+                                           prefix=f".{key}.")
+                try:
+                    with os.fdopen(fd, "wb") as f:
+                        pickle.dump(disk_obj, f, protocol=4)
+                    os.replace(tmp, p)
+                except BaseException:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
+                    raise
         return obj
 
     def evict(self, key: str) -> None:
-        self._memory.pop(key, None)
-        p = self._path(key)
-        if p is not None and p.exists():
-            p.unlink()
+        with self._key_lock(key):
+            with self._mem_lock:
+                self._memory.pop(key, None)
+            p = self._path(key)
+            if p is not None and p.exists():
+                p.unlink()
 
     def keys(self) -> Tuple[str, ...]:
         disk = ()
         if self.root is not None:
             disk = tuple(p.stem for p in self.root.glob("*.pkl"))
-        return tuple(sorted(set(self._memory) | set(disk)))
+        with self._mem_lock:
+            mem = set(self._memory)
+        return tuple(sorted(mem | set(disk)))
 
     # -- the stage entry point --------------------------------------------
 
@@ -183,9 +222,15 @@ class ArtifactStore:
         """Return the cached artifact for ``key``, or build+cache it.
 
         ``memory_only`` keeps unpicklable artifacts (jitted engines) out of
-        the disk tier while still memoizing them in-process."""
-        if self.has(key):
-            self.stats.record(stage, True, key)
-            return self.get(key)
-        self.stats.record(stage, False, key)
-        return self.put(key, build(), memory_only=memory_only)
+        the disk tier while still memoizing them in-process.
+
+        Concurrent-safe: callers racing on one key serialize on its key
+        lock, so exactly one of them runs ``build()`` (recorded as the
+        sole miss) and the rest are recorded as hits of the fresh
+        artifact — hit + miss counts always sum to the number of calls."""
+        with self._key_lock(key):
+            if self.has(key):
+                self.stats.record(stage, True, key)
+                return self.get(key)
+            self.stats.record(stage, False, key)
+            return self.put(key, build(), memory_only=memory_only)

@@ -32,12 +32,17 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Generator, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 Config = Tuple[int, ...]
 EvalFn = Callable[[Sequence[Config]], np.ndarray]   # -> (n, n_obj)
+# generation-granular sampler: yields one history dict per generation
+# (epoch for islands) and returns the final DSEResult — the serving
+# daemon advances these between other requests and streams the yields
+StepGen = Generator[Dict, None, "DSEResult"]
 
 
 @dataclass
@@ -80,6 +85,18 @@ def as_engine(evaluate: EvalFn) -> "SurrogateEngine":
     if isinstance(evaluate, SurrogateEngine):
         return evaluate
     return SurrogateEngine(evaluate, backend="wrapped")
+
+
+def drain_steps(gen: StepGen) -> "DSEResult":
+    """Run a generation-granular sampler generator to completion and
+    return its `DSEResult`. ``run_nsga`` et al. are exactly
+    ``drain_steps(<sampler>_steps(...))``, so the streamed and one-shot
+    paths share every instruction — bit-identical by construction."""
+    while True:
+        try:
+            next(gen)
+        except StopIteration as e:
+            return e.value
 
 
 # --------------------------------------------------------------------------
@@ -566,27 +583,18 @@ def run_tpe(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                      stats=engine.stats.as_dict())
 
 
-def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
-             seed: int = 0, pop: int = 64, variant: str = "nsga3",
-             stagnation: int = 5, ref_divisions: int = 6,
-             init: Optional[Sequence[Config]] = None) -> DSEResult:
-    """NSGA-II / NSGA-III with restart-on-stagnation (the paper's DSE).
+def nsga_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+               seed: int = 0, pop: int = 64, variant: str = "nsga3",
+               stagnation: int = 5, ref_divisions: int = 6,
+               init: Optional[Sequence[Config]] = None) -> StepGen:
+    """Generation-granular `run_nsga`: yields each `DSEResult.history`
+    entry as the generation completes, returns the final result.
 
-    Args:
-        sizes:         per-dimension categorical cardinalities.
-        evaluate:      batch evaluator or `SurrogateEngine` (see
-                       `as_engine`); offspring that duplicate earlier
-                       individuals hit the engine's memo cache.
-        budget:        total evaluation requests before stopping.
-        pop:           population size (paper: 64).
-        variant:       "nsga2" (crowding distance) or "nsga3" (Das-Dennis
-                       niching, the paper's choice for 4 objectives).
-        stagnation:    generations of an unchanged parent population before
-                       half the population is replaced with fresh randoms.
-        ref_divisions: Das-Dennis divisions for the NSGA-III reference set.
-        init:          warm-start configs seeded into the initial
-                       population (e.g. a previous run's Pareto front);
-                       the remainder is filled with uniform randoms.
+    The serving daemon (`repro.launch.serve`) drives this generator so a
+    long DSE request yields control between generations — other requests
+    interleave, and per-generation Pareto/hypervolume updates stream to
+    the client while the search runs. ``run_nsga`` is the one-shot
+    wrapper (`drain_steps`), so both paths are the same instructions.
     """
     engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
@@ -610,6 +618,7 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                         "hypervolume": hypervolume(parent_front, hv_ref)})
 
     record(F[non_dominated_sort(F)[0]])
+    yield history[-1]
     while evaluated < budget:
         Q = _crossover_mutate(P, sizes, rng)
         FQ = engine([tuple(r) for r in Q])
@@ -649,10 +658,39 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
             stale = 0
         prev_key = key
         record(F[non_dominated_sort(F)[0]])
+        yield history[-1]
     allF = np.concatenate(archive_F, 0)
     pc, po = pareto_front(archive_X, allF)
     return DSEResult(pc, po, evaluated, history=history,
                      stats=engine.stats.as_dict())
+
+
+def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+             seed: int = 0, pop: int = 64, variant: str = "nsga3",
+             stagnation: int = 5, ref_divisions: int = 6,
+             init: Optional[Sequence[Config]] = None) -> DSEResult:
+    """NSGA-II / NSGA-III with restart-on-stagnation (the paper's DSE).
+
+    Args:
+        sizes:         per-dimension categorical cardinalities.
+        evaluate:      batch evaluator or `SurrogateEngine` (see
+                       `as_engine`); offspring that duplicate earlier
+                       individuals hit the engine's memo cache.
+        budget:        total evaluation requests before stopping.
+        pop:           population size (paper: 64).
+        variant:       "nsga2" (crowding distance) or "nsga3" (Das-Dennis
+                       niching, the paper's choice for 4 objectives).
+        stagnation:    generations of an unchanged parent population before
+                       half the population is replaced with fresh randoms.
+        ref_divisions: Das-Dennis divisions for the NSGA-III reference set.
+        init:          warm-start configs seeded into the initial
+                       population (e.g. a previous run's Pareto front);
+                       the remainder is filled with uniform randoms.
+    """
+    return drain_steps(nsga_steps(sizes, evaluate, budget, seed=seed,
+                                  pop=pop, variant=variant,
+                                  stagnation=stagnation,
+                                  ref_divisions=ref_divisions, init=init))
 
 
 def _run_islands(*args, **kwargs) -> DSEResult:
@@ -671,3 +709,39 @@ SAMPLERS = {"random": run_random, "tpe": run_tpe,
             "nsga2": lambda *a, **k: run_nsga(*a, variant="nsga2", **k),
             "nsga3": lambda *a, **k: run_nsga(*a, variant="nsga3", **k),
             "islands": _run_islands, "islands_ref": _run_islands_ref}
+
+
+def iter_sampler(sampler: str, sizes: Sequence[int], evaluate: EvalFn,
+                 budget: int, seed: int = 0, **kwargs) -> StepGen:
+    """Uniform generation-granular interface over every sampler.
+
+    Returns a generator that yields `DSEResult.history` entries as they
+    are produced and returns the final `DSEResult` — the yielded dicts
+    ARE the entries of the returned ``history`` (same objects, same
+    order), which the serving parity tests assert.
+
+    ``nsga2``/``nsga3`` step truly per generation (`nsga_steps`);
+    ``islands`` steps per epoch boundary (`islands_steps`). The
+    sequential state machines (``tpe``, ``random``, ``islands_ref``) have
+    no incremental form — they run to completion on the first advance and
+    replay their history, so streaming is post-hoc but the protocol (and
+    bit-identity with ``SAMPLERS[name]``) is preserved.
+    """
+    if sampler in ("nsga2", "nsga3"):
+        return nsga_steps(sizes, evaluate, budget, seed=seed,
+                          variant=sampler, **kwargs)
+    if sampler == "islands":
+        from repro.core.islands import islands_steps
+        return islands_steps(sizes, evaluate, budget, seed=seed, **kwargs)
+    if sampler not in SAMPLERS:
+        raise ValueError(f"unknown sampler {sampler!r} "
+                         f"(have {sorted(SAMPLERS)})")
+
+    def replay() -> StepGen:
+        res = SAMPLERS[sampler](sizes, evaluate, budget, seed=seed,
+                                **kwargs)
+        for entry in res.history:
+            yield entry
+        return res
+
+    return replay()

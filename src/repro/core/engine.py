@@ -58,6 +58,13 @@ BatchFn = Callable[[Sequence[Config]], np.ndarray]
 class EngineStats:
     """Counters accumulated across `SurrogateEngine.__call__` invocations.
 
+    Thread-safe: every mutation goes through `update` (or `bump_max`),
+    which holds an internal lock, so counters stay exact when one engine
+    serves many concurrent sessions (the serving daemon, the island
+    orchestrator) — a bare ``stats.calls += 1`` from two threads can lose
+    increments even under the GIL, because the read-modify-write is not
+    atomic. `as_dict` snapshots all counters under the same lock.
+
     Attributes:
         calls:        number of ``engine(configs)`` invocations.
         configs:      total configs requested (including cache hits).
@@ -67,8 +74,14 @@ class EngineStats:
         padded:       wasted rows added to reach a fixed-shape bucket.
         chunks:       backend batch calls issued.
         max_batch:    largest single ``engine(configs)`` request seen —
-                      the island fleet's fused per-generation block shows
-                      up here as ``n_islands * pop``.
+                      the island fleet's fused per-generation block and
+                      the serving daemon's cross-request drains show up
+                      here.
+        submits:      queries enqueued via `SurrogateEngine.submit` (the
+                      cross-request batching path).
+        drains:       `SurrogateEngine.drain` waves that evaluated at
+                      least one submission; ``submits / drains`` is the
+                      mean cross-request batch occupancy.
         eval_time_s:  time inside the backend batch function.
         wall_time_s:  end-to-end time inside the engine (incl. cache
                       assembly).
@@ -80,8 +93,26 @@ class EngineStats:
     padded: int = 0
     chunks: int = 0
     max_batch: int = 0
+    submits: int = 0
+    drains: int = 0
     eval_time_s: float = 0.0
     wall_time_s: float = 0.0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def update(self, **deltas) -> None:
+        """Atomically add `deltas` to the named counters."""
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
+    def bump_max(self, **candidates) -> None:
+        """Atomically raise the named high-water-mark counters."""
+        with self._lock:
+            for name, v in candidates.items():
+                if v > getattr(self, name):
+                    setattr(self, name, v)
 
     @property
     def cache_hit_rate(self) -> float:
@@ -91,15 +122,31 @@ class EngineStats:
     def configs_per_sec(self) -> float:
         return self.configs / self.wall_time_s if self.wall_time_s else 0.0
 
+    @property
+    def batch_occupancy(self) -> float:
+        """Mean submissions coalesced per drain wave (1.0 = no batching
+        benefit; > 1 means cross-request batching is happening)."""
+        return self.submits / self.drains if self.drains else 0.0
+
     def as_dict(self) -> Dict[str, float]:
-        return {"calls": self.calls, "configs": self.configs,
-                "cache_hits": self.cache_hits, "evaluated": self.evaluated,
-                "padded": self.padded, "chunks": self.chunks,
-                "max_batch": self.max_batch,
-                "eval_time_s": round(self.eval_time_s, 4),
-                "wall_time_s": round(self.wall_time_s, 4),
-                "cache_hit_rate": round(self.cache_hit_rate, 4),
-                "configs_per_sec": round(self.configs_per_sec, 1)}
+        with self._lock:
+            snap = {"calls": self.calls, "configs": self.configs,
+                    "cache_hits": self.cache_hits,
+                    "evaluated": self.evaluated,
+                    "padded": self.padded, "chunks": self.chunks,
+                    "max_batch": self.max_batch,
+                    "submits": self.submits, "drains": self.drains,
+                    "eval_time_s": round(self.eval_time_s, 4),
+                    "wall_time_s": round(self.wall_time_s, 4)}
+        snap["cache_hit_rate"] = round(
+            snap["cache_hits"] / snap["configs"], 4) if snap["configs"] \
+            else 0.0
+        snap["configs_per_sec"] = round(
+            snap["configs"] / snap["wall_time_s"], 1) \
+            if snap["wall_time_s"] else 0.0
+        snap["batch_occupancy"] = round(
+            snap["submits"] / snap["drains"], 3) if snap["drains"] else 0.0
+        return snap
 
 
 # --------------------------------------------------------------------------
@@ -273,6 +320,11 @@ class SurrogateEngine:
         # orchestrator, repro.core.islands); the lock keeps cache/stats
         # mutation and backend dispatch coherent under that sharing
         self._lock = threading.RLock()
+        # cross-request batching queue (see submit/drain): pending
+        # (configs, future) submissions plus a condition variable the
+        # serving daemon's batcher thread blocks on
+        self._queue: List[Tuple[List[Config], "Future"]] = []
+        self._queue_cv = threading.Condition()
 
     # -- public API --------------------------------------------------------
 
@@ -314,21 +366,20 @@ class SurrogateEngine:
     def _call_locked(self, configs: Sequence[Config]) -> np.ndarray:
         t_wall = time.perf_counter()
         keys = [tuple(int(v) for v in c) for c in configs]
-        self.stats.calls += 1
-        self.stats.configs += len(keys)
-        self.stats.max_batch = max(self.stats.max_batch, len(keys))
+        self.stats.update(calls=1, configs=len(keys))
+        self.stats.bump_max(max_batch=len(keys))
         miss: List[Config] = []
         seen = set()
         for k in keys:
             if k not in self._cache and k not in seen:
                 seen.add(k)
                 miss.append(k)
-        self.stats.cache_hits += len(keys) - len(miss)
+        self.stats.update(cache_hits=len(keys) - len(miss))
         if miss:
             t0 = time.perf_counter()
             rows = self._eval_chunked(miss)
-            self.stats.eval_time_s += time.perf_counter() - t0
-            self.stats.evaluated += len(miss)
+            self.stats.update(eval_time_s=time.perf_counter() - t0,
+                              evaluated=len(miss))
             for k, r in zip(miss, rows):
                 self._cache[k] = r
         out = np.stack([self._cache[k] for k in keys], 0).astype(np.float64)
@@ -338,7 +389,7 @@ class SurrogateEngine:
             drop = len(self._cache) - self.max_cache
             for k in list(itertools.islice(self._cache, drop)):
                 del self._cache[k]
-        self.stats.wall_time_s += time.perf_counter() - t_wall
+        self.stats.update(wall_time_s=time.perf_counter() - t_wall)
         return out
 
     def reset_stats(self) -> None:
@@ -354,6 +405,106 @@ class SurrogateEngine:
     @property
     def cache_size(self) -> int:
         return len(self._cache)
+
+    # -- cross-request batching queue --------------------------------------
+    #
+    # The serving daemon (repro.launch.serve.EvalService) routes every
+    # in-flight request's surrogate queries through submit(); ONE batcher
+    # thread repeatedly drain()s, so queries that arrive while the backend
+    # is busy coalesce into the next fused evaluation — the LM-server
+    # decode-batching idiom applied to surrogate inference. Results are
+    # bit-identical to direct ``engine(configs)`` calls: drain() feeds the
+    # union through the same memoized/chunked ``__call__`` path and slices
+    # each submission's rows back out by position.
+
+    def submit(self, configs: Sequence[Config]) -> "Future":
+        """Enqueue a query; the returned future resolves to the same
+        ``(len(configs), n_obj)`` rows a direct call would produce once a
+        drain wave (any thread calling `drain`) picks it up."""
+        from concurrent.futures import Future
+
+        fut: Future = Future()
+        cfgs = list(configs)
+        if not cfgs:
+            fut.set_result(np.zeros((0, self.obj_cols or 0), np.float64))
+            return fut
+        with self._queue_cv:
+            self._queue.append((cfgs, fut))
+            self.stats.update(submits=1)
+            self._queue_cv.notify_all()
+        return fut
+
+    def pending(self) -> int:
+        """Number of submissions waiting for a drain wave."""
+        with self._queue_cv:
+            return len(self._queue)
+
+    def drain(self, timeout: Optional[float] = None) -> int:
+        """Evaluate ALL pending submissions as one fused engine call.
+
+        Blocks up to `timeout` seconds for a first submission to arrive
+        (``None`` = don't wait), then takes the whole queue — everything
+        that piled up while the previous wave was evaluating — runs the
+        concatenated configs through ``__call__`` (memo dedupe + fixed
+        chunking), and resolves each future with its slice. Returns the
+        number of submissions served; their count is the cross-request
+        batch occupancy tracked by ``stats.submits / stats.drains``.
+        """
+        with self._queue_cv:
+            if not self._queue and timeout is not None:
+                self._queue_cv.wait(timeout)
+            batch, self._queue = self._queue, []
+        if not batch:
+            return 0
+        flat: List[Config] = []
+        for cfgs, _ in batch:
+            flat.extend(cfgs)
+        try:
+            rows = self(flat)
+        except BaseException as e:                 # propagate to callers
+            for _, fut in batch:
+                fut.set_exception(e)
+            raise
+        self.stats.update(drains=1)
+        off = 0
+        for cfgs, fut in batch:
+            fut.set_result(rows[off:off + len(cfgs)])
+            off += len(cfgs)
+        return len(batch)
+
+    def abort_pending(self, exc: Optional[BaseException] = None) -> int:
+        """Fail all queued submissions (service shutdown); returns count."""
+        with self._queue_cv:
+            batch, self._queue = self._queue, []
+        exc = exc or RuntimeError("engine queue aborted")
+        for _, fut in batch:
+            fut.set_exception(exc)
+        return len(batch)
+
+    def queued_view(self, *, cache: bool = True,
+                    timeout: Optional[float] = 120.0) -> "SurrogateEngine":
+        """A per-request engine facade that routes through the queue.
+
+        Looks exactly like an engine to the DSE samplers (``as_engine``
+        passes it through untouched), but its backend is
+        ``submit(...).result()`` against *this* shared engine — so every
+        caller holding a view participates in cross-request batching
+        while keeping private stats (`DSEResult.stats` then reports the
+        request's own traffic). The view does no chunking or padding of
+        its own (one submission per sampler query keeps coalescing
+        decisions with the drain side) and memoizes locally on top of the
+        shared memo. Views serve objective rows only (the shared
+        ``__call__`` slices off any uncertainty block before the rows
+        reach the queue).
+        """
+        parent = self
+
+        def batch_fn(configs: Sequence[Config]) -> np.ndarray:
+            return parent.submit(configs).result(timeout=timeout)
+
+        return SurrogateEngine(batch_fn, backend=f"queued:{self.backend}",
+                               chunk_size=1 << 30, fixed_shape=False,
+                               cache=cache)
 
     # -- chunking ----------------------------------------------------------
 
@@ -372,7 +523,7 @@ class SurrogateEngine:
             chunk = configs[i:i + take]
             if self.fixed_shape and take < self.chunk_size:
                 b = self._bucket(take)
-                self.stats.padded += b - take
+                self.stats.update(padded=b - take)
                 chunk = chunk + [chunk[-1]] * (b - take)
             y = np.asarray(self._batch_fn(chunk))
             if y.shape[0] != len(chunk):
@@ -380,7 +531,7 @@ class SurrogateEngine:
                     f"backend returned {y.shape[0]} rows for "
                     f"{len(chunk)} configs")
             rows.append(y[:take])
-            self.stats.chunks += 1
+            self.stats.update(chunks=1)
             i += take
         return np.concatenate(rows, 0)
 

@@ -59,9 +59,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.dse import (Config, DSEResult, EvalFn, _crossover_mutate,
-                            _niche_select, as_engine, crowding_distance,
-                            das_dennis, hv_reference, hypervolume,
+from repro.core.dse import (Config, DSEResult, EvalFn, StepGen,
+                            _crossover_mutate, _niche_select, as_engine,
+                            crowding_distance, das_dennis, drain_steps,
+                            hv_reference, hypervolume,
                             non_dominated_ranks_batched, non_dominated_sort,
                             pareto_front, tpe_propose)
 
@@ -611,14 +612,21 @@ def run_islands_ref(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                      stats=engine.stats.as_dict())
 
 
-def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
-                seed: int = 0, *, n_islands: int = 4,
-                samplers: Optional[Sequence[str]] = None, epochs: int = 4,
-                migrate_k: int = 4, pop: int = 16,
-                partition_refs: bool = True, migration: str = "broadcast",
-                nds_backend: str = "auto") -> DSEResult:
-    """Run the island-model DSE as one batched array program; drop-in
-    alternative to the serial samplers.
+def islands_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+                  seed: int = 0, *, n_islands: int = 4,
+                  samplers: Optional[Sequence[str]] = None, epochs: int = 4,
+                  migrate_k: int = 4, pop: int = 16,
+                  partition_refs: bool = True, migration: str = "broadcast",
+                  nds_backend: str = "auto") -> StepGen:
+    """Epoch-granular `run_islands`: yields each epoch-boundary
+    `DSEResult.history` entry (merged front size, hypervolume, per-island
+    fronts) as it is produced and returns the final result — the serving
+    daemon drives this generator so one DSE request never monopolizes the
+    scheduler between epochs, and Pareto/hypervolume updates stream to
+    the client. ``run_islands`` is the one-shot `drain_steps` wrapper.
+    Fleets containing the sequential ``tpe``/``random`` samplers run to
+    completion on the first advance (`run_islands_ref`) and replay their
+    per-epoch history — identical results, post-hoc streaming.
 
     Per generation the whole fleet advances as tensors: crossover/
     mutation on the ``(n_islands, pop, n_units)`` population stack
@@ -628,9 +636,6 @@ def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
     across host devices), then per-island niche/crowding on the small cut
     fronts. Elite migration happens at epoch boundaries only
     (`_epoch_boundary`). No threads, no per-island Python evolution loop.
-
-    Fleets containing ``tpe``/``random`` islands delegate to
-    `run_islands_ref` (sequential stepping, identical results).
 
     Args:
         sizes:     per-dimension categorical cardinalities.
@@ -657,11 +662,14 @@ def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
     names, islands = _build_fleet(sizes, seed, n_islands, samplers, pop,
                                   partition_refs)
     if any(not isinstance(isl, _NsgaIsland) for isl in islands):
-        return run_islands_ref(
+        res = run_islands_ref(
             sizes, evaluate, budget, seed, n_islands=n_islands,
             samplers=samplers, epochs=epochs, migrate_k=migrate_k,
             pop=pop, parallel=False, partition_refs=partition_refs,
             migration=migration)
+        for entry in res.history:
+            yield entry
+        return res
     engine = as_engine(evaluate)
     total_gens, boundaries = _schedule(budget, n_islands, pop, epochs)
     d = len(sizes)
@@ -708,11 +716,47 @@ def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
             pc, po, hv_ref = _epoch_boundary(
                 islands, names, migration, migrate_k, hv_ref, gen,
                 evaluated, history)
+            yield history[-1]
 
     # the final generation is always an epoch boundary, so (pc, po) is the
     # merged global front over every island archive
     return DSEResult(pc, po, evaluated, history=history,
                      stats=engine.stats.as_dict())
+
+
+def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
+                seed: int = 0, *, n_islands: int = 4,
+                samplers: Optional[Sequence[str]] = None, epochs: int = 4,
+                migrate_k: int = 4, pop: int = 16,
+                partition_refs: bool = True, migration: str = "broadcast",
+                nds_backend: str = "auto") -> DSEResult:
+    """Run the island-model DSE as one batched array program; drop-in
+    alternative to the serial samplers (one-shot wrapper over
+    `islands_steps` — see that generator for the streaming form).
+
+    Args:
+        sizes:     per-dimension categorical cardinalities.
+        evaluate:  batch evaluator or `SurrogateEngine`; wrapped via
+                   `as_engine` and shared by every island.
+        budget:    total evaluation requests across all islands (same
+                   accounting as the serial samplers: every proposed
+                   config counts, engine cache hits included).
+        seed:      master seed; island seeds derive from (seed, island).
+        n_islands / samplers / epochs / migrate_k / pop / partition_refs
+        / migration / nds_backend:
+                   see `IslandConfig`.
+
+    Returns:
+        `DSEResult` whose front is the merged global archive's
+        non-dominated set and whose ``history`` has one entry per epoch
+        (merged front size + hypervolume under an epoch-0-fixed reference,
+        plus per-island front sizes).
+    """
+    return drain_steps(islands_steps(
+        sizes, evaluate, budget, seed, n_islands=n_islands,
+        samplers=samplers, epochs=epochs, migrate_k=migrate_k, pop=pop,
+        partition_refs=partition_refs, migration=migration,
+        nds_backend=nds_backend))
 
 
 def library_proxy_evaluator(app, entries: Dict[str, Sequence]) -> EvalFn:

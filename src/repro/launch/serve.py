@@ -1,29 +1,392 @@
-"""Batched serving driver with slot-based continuous batching.
+"""DSE-as-a-service: persistent evaluation/search daemon + LM demo.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        --reduced --requests 12 --max-new 16
+Two servers live here:
 
-A fixed decode batch of `slots` runs the jitted decode step; finished
-sequences release their slot, which is immediately refilled from the
-request queue (prefill for a single slot writes its KV into the shared
-ring-buffer cache). This is the standard TPU continuous-batching layout:
-one compiled decode program, per-slot position bookkeeping.
+* **`EvalService`** (the ApproxPilot serving layer) — a resident daemon
+  that keeps `SurrogateEngine`s, trained params and an `ArtifactStore`
+  warm across many client sessions and serves concurrent ``predict`` /
+  ``label`` / ``dse`` requests. Its core mechanism is **cross-request
+  batching**: every in-flight request routes its surrogate queries
+  through `SurrogateEngine.submit`, and one batcher thread per engine
+  repeatedly `drain`s the queue — queries that arrive while the backend
+  is busy coalesce into the next fused fixed-shape evaluation, exactly
+  the way LM servers batch decode steps across sequences. DSE requests
+  run generation-granularly (`repro.core.dse.iter_sampler`), yielding
+  between generations and streaming per-generation Pareto/hypervolume
+  history entries to the client while the search runs.
+
+      PYTHONPATH=src python -m repro.launch.serve --demo eval \
+          --clients 8 --requests-per-client 8
+
+  Parity guarantee: a tenant warmed from the staged pipeline
+  (`warm_start`) shares the SAME memoized engine object `run_staged`
+  uses for that config (the store's memory tier), and drains feed the
+  union of queued configs through the unchanged ``engine.__call__``
+  path — so service responses are bit-identical to one-shot
+  `run_staged` / direct engine calls (tests/test_serve.py), regardless
+  of how requests interleave. See docs/serving.md.
+
+* **`BatchServer`** (the original LM toy this module grew from) — slot
+  based continuous batching of one compiled transformer decode step;
+  kept as the decode-batching reference demo:
+
+      PYTHONPATH=src python -m repro.launch.serve --demo lm \
+          --arch granite-3-2b --reduced --requests 12 --max-new 16
 """
 from __future__ import annotations
 
 import argparse
+import itertools
+import queue
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, REDUCED_ARCHS
-from repro.configs.base import ShapeConfig
-from repro.models import decoding, transformer
+Config = Tuple[int, ...]
 
+
+# ==========================================================================
+# the evaluation/search service
+# ==========================================================================
+
+@dataclass
+class ServeRequest:
+    """One client request.
+
+    kind:
+        ``predict`` — surrogate objective rows for ``configs``;
+        ``label``   — ground-truth oracle rows for ``configs`` (the
+                      tenant must have an oracle: warm-started tenants
+                      build one lazily, registered tenants pass one);
+        ``dse``     — run ``sampler`` for ``budget`` evaluations on the
+                      tenant's engine, streaming per-generation history.
+    tenant:   name returned by `EvalService.register` / ``warm_start``.
+    configs:  predict/label payload.
+    sampler / budget / seed / dse_kwargs:
+              dse payload; ``dse_kwargs`` passes sampler knobs through
+              (``pop``, ``n_islands``, ``epochs``, ``migrate_k``, ...).
+    """
+    kind: str
+    tenant: str
+    configs: Optional[Sequence[Config]] = None
+    sampler: str = "nsga3"
+    budget: int = 256
+    seed: int = 0
+    dse_kwargs: Dict = field(default_factory=dict)
+
+
+@dataclass
+class ServeResponse:
+    """Result envelope: ``value`` is an ``(n, n_obj)`` ndarray for
+    predict/label, a `repro.core.dse.DSEResult` for dse."""
+    rid: int
+    kind: str
+    tenant: str
+    ok: bool
+    value: object = None
+    error: Optional[str] = None
+    submitted_s: float = 0.0          # perf_counter timestamps
+    started_s: float = 0.0
+    done_s: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end client-observed latency (queue wait + service)."""
+        return self.done_s - self.submitted_s
+
+
+class _Tenant:
+    """One resident evaluation context: engine + space + optional oracle."""
+
+    def __init__(self, name: str, engine, sizes: Sequence[int],
+                 oracle=None, oracle_builder: Optional[Callable] = None):
+        self.name = name
+        self.engine = engine
+        self.sizes = list(sizes)
+        self._oracle = oracle
+        self._oracle_builder = oracle_builder
+        self._oracle_lock = threading.Lock()
+
+    def oracle(self):
+        """The ground-truth engine, built lazily on first label request."""
+        with self._oracle_lock:
+            if self._oracle is None:
+                if self._oracle_builder is None:
+                    raise ValueError(
+                        f"tenant {self.name!r} has no oracle (label "
+                        f"requests need warm_start or register(oracle=))")
+                self._oracle = self._oracle_builder()
+            return self._oracle
+
+
+class _InFlight:
+    """Book-keeping for one submitted request."""
+
+    _DONE = object()                  # stream sentinel
+
+    def __init__(self, rid: int, req: ServeRequest):
+        self.rid = rid
+        self.req = req
+        self.stream_q: "queue.Queue" = queue.Queue()
+        self.done = threading.Event()
+        self.response: Optional[ServeResponse] = None
+
+
+class EvalService:
+    """Persistent async evaluation/search daemon.
+
+    Args:
+        store:        resident `ArtifactStore` shared by every tenant
+                      warm start (``None`` = a fresh memory-only store).
+        coalesce:     route request queries through the engines'
+                      submit/drain queues (one batcher thread per
+                      engine) so concurrent requests batch together.
+                      ``False`` = serial per-request handling — each
+                      handler calls the engine directly; used as the
+                      benchmark baseline (benchmarks/serve_bench.py).
+        max_workers:  request handler threads (in-flight request cap).
+        drain_wait_s: how long an idle batcher blocks waiting for the
+                      first submission of a wave. Purely a shutdown
+                      latency / idle-spin knob — batching itself needs
+                      no timing window, because whatever queues up while
+                      the backend evaluates the previous wave is taken
+                      wholesale by the next drain.
+
+    Results are deterministic and bit-identical to the one-shot path no
+    matter how many clients are in flight: engines memoize per config
+    key, drains reuse the unchanged chunked ``__call__``, and DSE
+    samplers derive all randomness from the request seed.
+    """
+
+    def __init__(self, store=None, *, coalesce: bool = True,
+                 max_workers: int = 8, drain_wait_s: float = 0.02):
+        from concurrent.futures import ThreadPoolExecutor
+
+        from repro.core.artifacts import ArtifactStore
+
+        self.store = store if store is not None else ArtifactStore(None)
+        self.coalesce = coalesce
+        self.drain_wait_s = drain_wait_s
+        self._tenants: Dict[str, _Tenant] = {}
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="serve-worker")
+        self._requests: Dict[int, _InFlight] = {}
+        self._rid = itertools.count()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._batchers: Dict[int, threading.Thread] = {}   # id(engine)
+
+    # -- tenants -----------------------------------------------------------
+
+    def register(self, name: str, evaluate, sizes: Sequence[int], *,
+                 oracle=None, oracle_builder: Optional[Callable] = None
+                 ) -> str:
+        """Register a tenant from any evaluator (wrapped via
+        `dse.as_engine`); returns the tenant name. Re-registering a name
+        replaces it."""
+        from repro.core.dse import as_engine
+
+        engine = as_engine(evaluate)
+        ora = as_engine(oracle) if oracle is not None else None
+        with self._lock:
+            self._tenants[name] = _Tenant(name, engine, sizes, oracle=ora,
+                                          oracle_builder=oracle_builder)
+        if self.coalesce:
+            self._ensure_batcher(engine)
+            if ora is not None:
+                self._ensure_batcher(ora)
+        return name
+
+    def warm_start(self, cfg, name: Optional[str] = None) -> str:
+        """Build (or resume from the resident store) a tenant for one
+        `PipelineConfig`: prune -> dataset -> train -> engine through the
+        cached stages, so a second session with the same config slice
+        reuses the disk-tier dataset/params and the memory-tier engine —
+        and is therefore served bit-identically to `run_staged`."""
+        from repro.core import pipeline as P
+
+        ctx = P.stage_prune(cfg, self.store)
+        ds = P.stage_dataset(cfg, self.store, ctx)
+        art = P.stage_train(cfg, self.store, ds)
+        engine = P.stage_engine(cfg, self.store, ctx, ds, art)
+        sizes = [len(ctx.entries[n.kind]) for n in ctx.app.unit_nodes]
+        name = name or f"{cfg.app}/{self.store.key('engine', P._engine_spec(cfg))}"
+
+        def build_oracle():
+            from repro.core.engine import SurrogateEngine
+            key = self.store.key("oracle_engine",
+                                 {"app": cfg.app, "theta": cfg.theta})
+            return self.store.get_or_build(
+                "oracle_engine", key,
+                lambda: SurrogateEngine.from_oracle(
+                    ctx.app, ctx.entries, ctx.inp, ctx.exact_out),
+                memory_only=True)
+
+        return self.register(name, engine, sizes,
+                             oracle_builder=build_oracle)
+
+    def tenants(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._tenants))
+
+    # -- the cross-request batching loop -----------------------------------
+
+    def _ensure_batcher(self, engine) -> None:
+        key = id(engine)
+        with self._lock:
+            if key in self._batchers or self._stop.is_set():
+                return
+            th = threading.Thread(target=self._batch_loop, args=(engine,),
+                                  daemon=True,
+                                  name=f"serve-batcher-{len(self._batchers)}")
+            self._batchers[key] = th
+        th.start()
+
+    def _batch_loop(self, engine) -> None:
+        """One engine's continuous batching loop: each `drain` evaluates
+        EVERYTHING queued — submissions that piled up while the previous
+        wave was in the backend coalesce into one fused call (the
+        cross-request occupancy is ``stats.submits / stats.drains``)."""
+        while not self._stop.is_set():
+            engine.drain(timeout=self.drain_wait_s)
+        engine.drain(timeout=None)     # serve stragglers, then fail rest
+        engine.abort_pending(RuntimeError("EvalService closed"))
+
+    def _eval_for(self, tenant: _Tenant, engine=None):
+        """The evaluator a request handler should use: a queued view
+        participating in cross-request batching, or the engine directly
+        in serial (``coalesce=False``) mode."""
+        engine = engine if engine is not None else tenant.engine
+        return engine.queued_view() if self.coalesce else engine
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> int:
+        """Enqueue a request; returns a request id immediately."""
+        if self._stop.is_set():
+            raise RuntimeError("EvalService is closed")
+        with self._lock:
+            if req.tenant not in self._tenants:
+                raise KeyError(f"unknown tenant {req.tenant!r} "
+                               f"(have {sorted(self._tenants)})")
+            rid = next(self._rid)
+            rec = _InFlight(rid, req)
+            self._requests[rid] = rec
+        rec.submitted_s = time.perf_counter()
+        self._pool.submit(self._run_request, rec)
+        return rid
+
+    def _run_request(self, rec: _InFlight) -> None:
+        req = rec.req
+        t_start = time.perf_counter()
+        try:
+            value = self._dispatch(req, rec)
+            resp = ServeResponse(rec.rid, req.kind, req.tenant, True,
+                                 value=value)
+        except BaseException as e:     # noqa: BLE001 — reported to client
+            resp = ServeResponse(rec.rid, req.kind, req.tenant, False,
+                                 error=f"{type(e).__name__}: {e}")
+        resp.submitted_s = rec.submitted_s
+        resp.started_s = t_start
+        resp.done_s = time.perf_counter()
+        rec.response = resp
+        rec.stream_q.put(_InFlight._DONE)
+        rec.done.set()
+
+    def _dispatch(self, req: ServeRequest, rec: _InFlight):
+        with self._lock:
+            tenant = self._tenants[req.tenant]
+        if req.kind == "predict":
+            return np.asarray(self._eval_for(tenant)(list(req.configs)))
+        if req.kind == "label":
+            oracle = tenant.oracle()
+            if self.coalesce:
+                self._ensure_batcher(oracle)
+            return np.asarray(
+                self._eval_for(tenant, oracle)(list(req.configs)))
+        if req.kind == "dse":
+            from repro.core import dse as dse_lib
+
+            gen = dse_lib.iter_sampler(
+                req.sampler, tenant.sizes, self._eval_for(tenant),
+                req.budget, seed=req.seed, **req.dse_kwargs)
+            while True:
+                try:
+                    rec.stream_q.put(next(gen))
+                except StopIteration as e:
+                    return e.value
+        raise ValueError(f"unknown request kind {req.kind!r}")
+
+    def stream(self, rid: int, timeout: Optional[float] = 300.0
+               ) -> Iterator[Dict]:
+        """Iterate a dse request's per-generation history entries as the
+        search produces them (returns immediately-exhausted for
+        predict/label). The yielded dicts are exactly the entries of the
+        final ``DSEResult.history`` (same objects, same order)."""
+        rec = self._rec(rid)
+        while True:
+            entry = rec.stream_q.get(timeout=timeout)
+            if entry is _InFlight._DONE:
+                return
+            yield entry
+
+    def result(self, rid: int, timeout: Optional[float] = None
+               ) -> ServeResponse:
+        """Block until the request finishes; returns its response. The
+        request stays retrievable until `forget(rid)`."""
+        rec = self._rec(rid)
+        if not rec.done.wait(timeout):
+            raise TimeoutError(f"request {rid} still running")
+        return rec.response
+
+    def results(self, rids: Sequence[int],
+                timeout: Optional[float] = None) -> List[ServeResponse]:
+        return [self.result(r, timeout=timeout) for r in rids]
+
+    def forget(self, rid: int) -> None:
+        with self._lock:
+            self._requests.pop(rid, None)
+
+    def _rec(self, rid: int) -> _InFlight:
+        with self._lock:
+            try:
+                return self._requests[rid]
+            except KeyError:
+                raise KeyError(f"unknown request id {rid}") from None
+
+    # -- introspection / lifecycle -----------------------------------------
+
+    def stats(self) -> Dict[str, Dict]:
+        """Per-tenant engine stats — cross-request batch occupancy shows
+        up as ``submits / drains`` (and in ``max_batch``)."""
+        with self._lock:
+            tenants = dict(self._tenants)
+        return {name: t.engine.stats.as_dict()
+                for name, t in tenants.items()}
+
+    def close(self) -> None:
+        """Finish in-flight work, stop the batchers, shut the pool."""
+        self._stop.set()
+        with self._lock:
+            batchers = list(self._batchers.values())
+        for th in batchers:
+            th.join(timeout=10.0)
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "EvalService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ==========================================================================
+# the original LM continuous-batching demo (kept as the decode reference)
+# ==========================================================================
 
 @dataclass
 class Request:
@@ -35,9 +398,22 @@ class Request:
 
 
 class BatchServer:
-    """Slot-based continuous batching on one compiled decode step."""
+    """Slot-based continuous batching on one compiled decode step.
+
+    The LM toy `EvalService` generalizes: a fixed decode batch of
+    ``slots`` runs the jitted decode step; finished sequences release
+    their slot, which is immediately refilled from the request queue
+    (prefill for a single slot writes its KV into the shared ring-buffer
+    cache). This is the standard TPU continuous-batching layout: one
+    compiled decode program, per-slot position bookkeeping.
+    """
 
     def __init__(self, cfg, params, slots: int = 4, max_len: int = 128):
+        import jax
+
+        from repro.configs.base import ShapeConfig
+        from repro.models import decoding
+
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -68,6 +444,8 @@ class BatchServer:
         return True
 
     def _step_slot(self, slot: int, token: int) -> int:
+        import jax.numpy as jnp
+
         toks = np.zeros((self.slots, 1), np.int32)
         toks[slot, 0] = token
         logits, self.cache = self._decode(
@@ -77,12 +455,12 @@ class BatchServer:
         self.steps += 1
         return int(jnp.argmax(logits[slot, -1]))
 
-    def run(self, queue: List[Request]) -> Dict[int, List[int]]:
-        queue = list(queue)
+    def run(self, queue_: List[Request]) -> Dict[int, List[int]]:
+        queue_ = list(queue_)
         pending: Dict[int, int] = {}      # slot -> last token
-        while queue or any(self.active):
-            while queue and self._free_slot() is not None:
-                req = queue.pop(0)
+        while queue_ or any(self.active):
+            while queue_ and self._free_slot() is not None:
+                req = queue_.pop(0)
                 self.admit(req)
                 pending[self.active.index(req)] = int(req.prompt[-1])
             # one decode wave: advance every active slot by one token
@@ -99,15 +477,56 @@ class BatchServer:
         return {}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=6)
-    args = ap.parse_args()
+# ==========================================================================
+# demos
+# ==========================================================================
+
+def _demo_eval(args) -> None:
+    """Fire concurrent predict + dse sessions at a proxy-backed service."""
+    from repro.accel import apps as apps_lib
+    from repro.core import pruning
+    from repro.core.islands import library_proxy_evaluator
+
+    app = apps_lib.APPS[args.app]
+    pruned, _ = pruning.prune_library()
+    entries = {k: pruned[k] for k in {n.kind for n in app.unit_nodes}}
+    sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+
+    with EvalService(coalesce=True) as svc:
+        svc.register(args.app, library_proxy_evaluator(app, entries), sizes)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        rids = []
+        for c in range(args.clients):
+            for _ in range(args.requests_per_client):
+                cfgs = [tuple(int(rng.integers(0, s)) for s in sizes)
+                        for _ in range(args.configs_per_request)]
+                rids.append(svc.submit(ServeRequest(
+                    "predict", args.app, configs=cfgs)))
+        dse_rid = svc.submit(ServeRequest("dse", args.app, sampler="nsga3",
+                                          budget=args.dse_budget, seed=0,
+                                          dse_kwargs={"pop": 16}))
+        for entry in svc.stream(dse_rid):
+            print(f"  dse gen {entry['generation']}: front="
+                  f"{entry['front_size']} hv={entry['hypervolume']:.4g}")
+        resps = svc.results(rids + [dse_rid])
+        dt = time.perf_counter() - t0
+        assert all(r.ok for r in resps), [r.error for r in resps]
+        lat = sorted(r.latency_s for r in resps)
+        st = svc.stats()[args.app]
+        print(f"served {len(resps)} requests in {dt:.2f}s "
+              f"({len(resps) / dt:.1f} req/s), "
+              f"P50 {lat[len(lat) // 2] * 1e3:.1f}ms "
+              f"P99 {lat[int(len(lat) * 0.99)] * 1e3:.1f}ms")
+        print(f"engine: occupancy={st['batch_occupancy']} "
+              f"max_batch={st['max_batch']} hit_rate={st['cache_hit_rate']}")
+
+
+def _demo_lm(args) -> None:
+    import jax
+
+    from repro.configs import ARCHS, REDUCED_ARCHS
+    from repro.models import transformer
 
     cfg = (REDUCED_ARCHS if args.reduced else ARCHS)[args.arch]
     params = transformer.build_param_table(cfg).init(jax.random.PRNGKey(0))
@@ -125,6 +544,26 @@ def main() -> None:
           f"({total_tokens / dt:.1f} tok/s)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {list(r.prompt)} -> {r.out}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--demo", choices=("eval", "lm"), default="eval")
+    # eval-service demo
+    ap.add_argument("--app", default="sobel")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests-per-client", type=int, default=8)
+    ap.add_argument("--configs-per-request", type=int, default=16)
+    ap.add_argument("--dse-budget", type=int, default=256)
+    # lm demo
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=6)
+    args = ap.parse_args()
+    (_demo_eval if args.demo == "eval" else _demo_lm)(args)
 
 
 if __name__ == "__main__":

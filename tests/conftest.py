@@ -1,4 +1,4 @@
-"""Shared pytest configuration: `hypothesis` fallback shim.
+"""Shared pytest configuration: markers + `hypothesis` fallback shim.
 
 Four test modules (test_units, test_library_apps, test_substrate,
 test_gnn_core) use hypothesis property tests. The runtime environment may
@@ -22,6 +22,15 @@ import types
 import zlib
 
 import numpy as np
+
+
+def pytest_configure(config):
+    # `slow` marks multi-second tests (training runs, concurrency soak
+    # loops). Tier-1 runs them by default; CI lanes that need a quick
+    # signal can deselect with ``-m "not slow"``.
+    config.addinivalue_line(
+        "markers", "slow: multi-second test (deselect with -m 'not slow')")
+
 
 try:
     import hypothesis  # noqa: F401  (real package wins when available)

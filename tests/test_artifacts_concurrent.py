@@ -1,0 +1,152 @@
+"""Concurrency hammering for `ArtifactStore`: the serving daemon keeps
+one resident store shared by every tenant warm start, so same-key
+builder races must collapse to a single build, counters must stay exact,
+and disk pickles must never tear (atomic tempfile + os.replace).
+
+Property-test style: thread counts / repeat counts are hypothesis
+parameters (works with both the real package and the conftest fallback
+shim, which supports integers/sampled_from only).
+"""
+import pickle
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.artifacts import ArtifactStore
+
+
+def _hammer(n_threads, fn):
+    """Run `fn(i)` from n_threads threads through a start barrier;
+    re-raises the first worker exception."""
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def work(i):
+        try:
+            barrier.wait()
+            fn(i)
+        except BaseException as e:             # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 4))
+def test_same_key_get_or_build_builds_once(n_threads, repeats):
+    """All racers on ONE key: exactly one build; hits+misses == calls."""
+    store = ArtifactStore(None)
+    built = []
+
+    def build():
+        built.append(1)
+        return {"payload": 42}
+
+    def racer(i):
+        for _ in range(repeats):
+            got = store.get_or_build("stage", "k", build)
+            assert got == {"payload": 42}
+
+    _hammer(n_threads, racer)
+    assert len(built) == 1
+    st_ = store.stats.as_dict()
+    assert st_["misses"].get("stage", 0) == 1
+    assert st_["hits"].get("stage", 0) + 1 == n_threads * repeats
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 8))
+def test_disjoint_keys_fully_parallel_exact_counters(n_threads):
+    """Disjoint writers + readers: every key built exactly once, every
+    artifact retrievable, per-stage counters sum to the call count."""
+    store = ArtifactStore(None)
+    builds = {}
+    lock = threading.Lock()
+
+    def racer(i):
+        key = f"k{i}"
+
+        def build():
+            with lock:
+                builds[key] = builds.get(key, 0) + 1
+            return np.full(16, i)
+
+        for _ in range(5):
+            got = store.get_or_build(f"s{i}", key, build)
+            assert np.array_equal(got, np.full(16, i))
+
+    _hammer(n_threads, racer)
+    assert builds == {f"k{i}": 1 for i in range(n_threads)}
+    st_ = store.stats.as_dict()
+    for i in range(n_threads):
+        assert st_["misses"][f"s{i}"] == 1
+        assert st_["hits"][f"s{i}"] == 4
+    assert sorted(store.keys()) == sorted(f"k{i}" for i in range(n_threads))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(2, 8))
+def test_concurrent_same_key_writers_no_torn_pickle(n_threads):
+    """Same-key overwriters racing readers on the DISK tier: every read
+    (in-process and raw off-disk) sees one writer's complete array,
+    never an interleaving of two."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        store = ArtifactStore(root)
+        payloads = {i: np.full(4096, i, np.int64) for i in range(n_threads)}
+        stop = threading.Event()
+        seen = []
+
+        def racer(i):
+            if i == 0:        # dedicated reader thread
+                while not stop.is_set():
+                    try:
+                        obj = store.get("k")
+                    except KeyError:
+                        continue
+                    assert len(set(obj.tolist())) == 1    # untorn
+                    seen.append(int(obj[0]))
+                return
+            for _ in range(10):
+                store.put("k", payloads[i])
+                with store._mem_lock:     # force next get() off disk
+                    store._memory.pop("k", None)
+            stop.set()                    # first finished writer frees reader
+
+        _hammer(n_threads, racer)
+        stop.set()
+        # the final on-disk pickle is one complete payload
+        with open(store._path("k"), "rb") as f:
+            final = pickle.load(f)
+        assert int(final[0]) in payloads and len(set(final.tolist())) == 1
+        assert all(v in payloads for v in seen)
+
+
+def test_evict_races_get_or_build():
+    """evict vs get_or_build on one key never corrupts state: afterwards
+    the key either exists with the built value or is absent."""
+    store = ArtifactStore(None)
+
+    def racer(i):
+        for _ in range(50):
+            if i % 2:
+                store.get_or_build("s", "k", lambda: "value")
+            else:
+                store.evict("k")
+
+    _hammer(8, racer)
+    if store.has("k"):
+        assert store.get("k") == "value"
+    st_ = store.stats.as_dict()
+    n_calls = 4 * 50
+    assert st_["hits"].get("s", 0) + st_["misses"].get("s", 0) == n_calls

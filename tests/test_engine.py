@@ -267,3 +267,124 @@ def test_sampler_results_unchanged_by_engine_wrapping():
     r2 = dse.run_nsga([8] * 5, dse.as_engine(toy), 240, seed=3, pop=24)
     np.testing.assert_allclose(r1.pareto_objs, r2.pareto_objs)
     assert r1.pareto_configs == r2.pareto_configs
+
+
+# --------------------------------------------------------------------------
+# concurrency: exact stats + the submit/drain cross-request queue
+# --------------------------------------------------------------------------
+
+def test_engine_stats_exact_under_8x1000_threads():
+    """Regression for the stats mutation race: 8 threads x 1000 queries
+    must land every counter on its exact total. The old bare
+    ``stats.calls += 1`` read-modify-write lost increments under
+    contention (non-atomic even with the GIL); `EngineStats.update` now
+    holds a lock."""
+    import threading
+
+    from repro.core.engine import EngineStats
+
+    n_threads, per_thread = 8, 1000
+    stats = EngineStats()
+    barrier = threading.Barrier(n_threads)
+
+    def worker(t):
+        barrier.wait()
+        for i in range(per_thread):
+            stats.update(calls=1, configs=3, cache_hits=1, evaluated=2)
+            stats.bump_max(max_batch=t * per_thread + i)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    total = n_threads * per_thread
+    assert stats.calls == total
+    assert stats.configs == 3 * total
+    assert stats.cache_hits == total
+    assert stats.evaluated == 2 * total
+    assert stats.max_batch == total - 1      # max over t*1000+i
+    d = stats.as_dict()
+    assert d["calls"] == total and d["configs"] == 3 * total
+
+
+def test_concurrent_engine_queries_exact_totals():
+    """8 threads querying ONE engine: results correct per-thread and the
+    shared counters sum exactly (no lost updates end-to-end)."""
+    import threading
+
+    be = CountingBackend()
+    eng = SurrogateEngine(be, chunk_size=64)
+    n_threads, per_thread, width = 8, 125, 4
+    work = {t: [_rand_configs(width, seed=1000 * t + i)
+                for i in range(per_thread)] for t in range(n_threads)}
+    barrier = threading.Barrier(n_threads)
+    errs = []
+
+    def worker(t):
+        try:
+            barrier.wait()
+            for cfgs in work[t]:
+                np.testing.assert_allclose(eng(cfgs), _toy_rows(cfgs))
+        except BaseException as e:             # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs, errs[0]
+    assert eng.stats.calls == n_threads * per_thread
+    assert eng.stats.configs == n_threads * per_thread * width
+    # every row that was not a memo/batch-dedup hit reached the backend
+    assert eng.stats.evaluated == sum(be.calls)
+    assert eng.stats.cache_hits + eng.stats.evaluated == eng.stats.configs
+
+
+def test_submit_drain_queue_parity_and_occupancy():
+    """Producer threads submitting through `queued_view` while one
+    batcher drains: every producer gets exactly the rows the backend
+    computes for ITS configs, and queued submissions fuse (occupancy
+    accounting: submits counted, drains <= submits)."""
+    import threading
+
+    eng = SurrogateEngine(CountingBackend(), chunk_size=256)
+    stop = threading.Event()
+
+    def batch_loop():
+        while not stop.is_set():
+            eng.drain(timeout=0.005)
+        eng.drain(timeout=None)
+
+    batcher = threading.Thread(target=batch_loop, daemon=True)
+    batcher.start()
+    n_threads, per_thread = 8, 20
+    errs = []
+    barrier = threading.Barrier(n_threads)
+
+    def producer(t):
+        view = eng.queued_view()
+        try:
+            barrier.wait()
+            for i in range(per_thread):
+                cfgs = _rand_configs(6, seed=31 * t + i)
+                np.testing.assert_allclose(view(cfgs), _toy_rows(cfgs))
+        except BaseException as e:             # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    stop.set()
+    batcher.join(timeout=10.0)
+    assert not errs, errs[0]
+    assert eng.stats.submits == n_threads * per_thread
+    assert 0 < eng.stats.drains <= eng.stats.submits
+    assert eng.stats.batch_occupancy >= 1.0
+    assert eng.pending() == 0

@@ -1,0 +1,287 @@
+"""Concurrency correctness harness for the `EvalService` daemon.
+
+The serving layer's contract (docs/serving.md) is that cross-request
+batching is *invisible*: however many clients are in flight, every
+response is bit-identical to what the one-shot path — a direct
+`SurrogateEngine` call or `pipeline.run_staged` — would have produced,
+and repeated runs of the same workload are deterministic. These tests
+hammer that contract from N threads with interleaved predict / label /
+dse traffic.
+
+Exactness strategy: the fast tests use `library_proxy_evaluator` (pure
+row-independent NumPy, so fused cross-request batches cannot perturb
+rows); the slow test warms a GNN tenant from the staged pipeline and
+leans on the store's memory tier + engine memoization (the service
+serves the SAME engine object `run_staged` used, so repeated configs are
+cache hits with identical floats).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.accel import apps as apps_lib
+from repro.core import dse as dse_lib
+from repro.core import pipeline as P
+from repro.core import pruning
+from repro.core.artifacts import ArtifactStore
+from repro.core.dse import as_engine
+from repro.core.islands import library_proxy_evaluator
+from repro.launch.serve import EvalService, ServeRequest
+
+APP = "sobel"
+
+
+@pytest.fixture(scope="module")
+def space():
+    app = apps_lib.APPS[APP]
+    pruned, _ = pruning.prune_library()
+    entries = {k: pruned[k] for k in {n.kind for n in app.unit_nodes}}
+    sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+    return app, entries, sizes
+
+
+def _proxy(space):
+    app, entries, _ = space
+    return library_proxy_evaluator(app, entries)
+
+
+def _rand_configs(sizes, n, seed):
+    rng = np.random.default_rng(seed)
+    return [tuple(int(rng.integers(0, s)) for s in sizes)
+            for _ in range(n)]
+
+
+def _run_workload(space, *, coalesce, n_clients=8, per_client=4,
+                  dse_clients=2):
+    """Interleaved predict + dse workload; returns (responses, stats)."""
+    _, _, sizes = space
+    with EvalService(coalesce=coalesce) as svc:
+        svc.register(APP, _proxy(space), sizes)
+        rids = {}
+        barrier = threading.Barrier(n_clients)
+
+        def client(c):
+            barrier.wait()         # maximize interleaving
+            mine = []
+            for r in range(per_client):
+                if c < dse_clients and r == 0:
+                    req = ServeRequest(
+                        "dse", APP, sampler="nsga2" if c % 2 else "nsga3",
+                        budget=96, seed=c, dse_kwargs={"pop": 12})
+                else:
+                    req = ServeRequest(
+                        "predict", APP,
+                        configs=_rand_configs(sizes, 16, 1000 * c + r))
+                mine.append(svc.submit(req))
+            rids[c] = mine
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        resps = {c: svc.results(r, timeout=120.0) for c, r in rids.items()}
+        stats = svc.stats()[APP]
+    return resps, stats
+
+
+def test_concurrent_workload_bit_identical_to_one_shot(space):
+    """8 threads of interleaved predict/dse == fresh one-shot engines."""
+    _, _, sizes = space
+    resps, _ = _run_workload(space, coalesce=True)
+    reference = as_engine(_proxy(space))   # fresh, never saw the service
+    for c, client_resps in resps.items():
+        for r, resp in enumerate(client_resps):
+            assert resp.ok, resp.error
+            if resp.kind == "predict":
+                expect = reference(_rand_configs(sizes, 16, 1000 * c + r))
+                assert np.array_equal(resp.value, np.asarray(expect))
+            else:
+                one_shot = dse_lib.SAMPLERS[
+                    "nsga2" if c % 2 else "nsga3"](
+                        sizes, as_engine(_proxy(space)), 96,
+                        seed=c, pop=12)
+                assert resp.value.pareto_configs == one_shot.pareto_configs
+                assert np.array_equal(np.asarray(resp.value.pareto_objs),
+                                      np.asarray(one_shot.pareto_objs))
+                assert resp.value.history == one_shot.history
+
+
+def test_deterministic_across_service_runs(space):
+    """The same concurrent workload twice -> identical responses."""
+    a, _ = _run_workload(space, coalesce=True)
+    b, _ = _run_workload(space, coalesce=True)
+    assert sorted(a) == sorted(b)
+    for c in a:
+        for ra, rb in zip(a[c], b[c]):
+            assert (ra.kind, ra.ok) == (rb.kind, rb.ok)
+            if ra.kind == "predict":
+                assert np.array_equal(ra.value, rb.value)
+            else:
+                assert ra.value.pareto_configs == rb.value.pareto_configs
+                assert ra.value.history == rb.value.history
+
+
+def test_serial_mode_matches_coalesced_mode(space):
+    """coalesce=False (per-request direct calls) == coalesce=True."""
+    a, _ = _run_workload(space, coalesce=True, n_clients=4)
+    b, _ = _run_workload(space, coalesce=False, n_clients=4)
+    for c in a:
+        for ra, rb in zip(a[c], b[c]):
+            if ra.kind == "predict":
+                assert np.array_equal(ra.value, rb.value)
+            else:
+                assert ra.value.history == rb.value.history
+
+
+def test_cross_request_batching_coalesces(space):
+    """With a slow backend and 8 concurrent clients, queued submissions
+    pile up while a wave is in flight, so drains fuse multiple requests:
+    occupancy (submits/drains) must exceed 1 and max_batch must exceed
+    any single request's size."""
+    _, _, sizes = space
+    proxy = _proxy(space)
+
+    def slow_proxy(configs):
+        time.sleep(0.005)
+        return proxy(configs)
+
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, slow_proxy, sizes)
+        barrier = threading.Barrier(8)
+        rids = []
+        lock = threading.Lock()
+
+        def client(c):
+            barrier.wait()
+            for r in range(4):
+                rid = svc.submit(ServeRequest(
+                    "predict", APP,
+                    configs=_rand_configs(sizes, 8, 77 * c + r)))
+                with lock:
+                    rids.append(rid)
+            svc.results(rids[-4:], timeout=60.0)
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for resp in svc.results(rids, timeout=60.0):
+            assert resp.ok, resp.error
+        st = svc.stats()[APP]
+    assert st["submits"] == 32
+    assert st["drains"] < st["submits"], st
+    assert st["batch_occupancy"] > 1.0
+    assert st["max_batch"] > 8                 # fused beyond one request
+
+
+def test_streamed_history_equals_final_history(space):
+    """`stream()` yields exactly the entries of the final
+    ``DSEResult.history``, in order, while the search is running."""
+    _, _, sizes = space
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, _proxy(space), sizes)
+        rid = svc.submit(ServeRequest("dse", APP, sampler="nsga3",
+                                      budget=128, seed=3,
+                                      dse_kwargs={"pop": 16}))
+        streamed = list(svc.stream(rid))
+        resp = svc.result(rid, timeout=120.0)
+    assert resp.ok, resp.error
+    assert streamed == resp.value.history
+    assert [e["generation"] for e in streamed] == \
+        list(range(len(streamed)))
+
+
+def test_streamed_islands_history(space):
+    """Epoch-granular streaming from the island fleet sampler."""
+    _, _, sizes = space
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, _proxy(space), sizes)
+        rid = svc.submit(ServeRequest(
+            "dse", APP, sampler="islands", budget=128, seed=1,
+            dse_kwargs={"n_islands": 2, "pop": 8}))
+        streamed = list(svc.stream(rid))
+        resp = svc.result(rid, timeout=120.0)
+    assert resp.ok, resp.error
+    assert streamed == resp.value.history
+    one_shot = dse_lib.SAMPLERS["islands"](
+        sizes, as_engine(_proxy(space)), 128, seed=1, n_islands=2, pop=8)
+    assert resp.value.history == one_shot.history
+    assert resp.value.pareto_configs == one_shot.pareto_configs
+
+
+def test_label_requests_use_oracle(space):
+    """`label` routes through the tenant oracle, not the surrogate."""
+    _, _, sizes = space
+    proxy = _proxy(space)
+
+    def fake_oracle(configs):
+        return np.asarray(proxy(configs)) * 2.0
+
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, proxy, sizes, oracle=fake_oracle)
+        cfgs = _rand_configs(sizes, 12, 5)
+        pr = svc.result(svc.submit(
+            ServeRequest("predict", APP, configs=cfgs)), timeout=60.0)
+        lr = svc.result(svc.submit(
+            ServeRequest("label", APP, configs=cfgs)), timeout=60.0)
+    assert pr.ok and lr.ok, (pr.error, lr.error)
+    assert np.array_equal(lr.value, np.asarray(pr.value) * 2.0)
+
+
+def test_request_errors_are_reported_not_fatal(space):
+    """Bad requests error their own response; the service stays up."""
+    _, _, sizes = space
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, _proxy(space), sizes)
+        with pytest.raises(KeyError):
+            svc.submit(ServeRequest("predict", "no-such-tenant",
+                                    configs=[(0,) * len(sizes)]))
+        bad = svc.result(svc.submit(
+            ServeRequest("label", APP,
+                         configs=[(0,) * len(sizes)])), timeout=60.0)
+        assert not bad.ok and "oracle" in bad.error
+        worse = svc.result(svc.submit(
+            ServeRequest("frobnicate", APP)), timeout=60.0)
+        assert not worse.ok and "frobnicate" in worse.error
+        good = svc.result(svc.submit(ServeRequest(
+            "predict", APP,
+            configs=_rand_configs(sizes, 4, 9))), timeout=60.0)
+        assert good.ok, good.error
+    assert pytest.raises(RuntimeError, svc.submit,
+                         ServeRequest("predict", APP, configs=[]))
+
+
+@pytest.mark.slow
+def test_warm_start_serves_bit_identical_to_run_staged(tmp_path):
+    """A tenant warmed from the staged pipeline on a SHARED store serves
+    the same engine object `run_staged` used — predict rows on the
+    Pareto set and a repeated DSE request are bit-identical."""
+    cfg = P.PipelineConfig(app=APP, n_samples=120, epochs=4,
+                           dse_budget=100, hidden=32, n_layers=2,
+                           dse_pop=16)
+    store = ArtifactStore(str(tmp_path / "store"))
+    res = P.run_staged(cfg, store)
+
+    with EvalService(store) as svc:
+        name = svc.warm_start(cfg)
+        assert name in svc.tenants()
+        pr = svc.result(svc.submit(ServeRequest(
+            "predict", name, configs=res.pareto_configs)), timeout=300.0)
+        dr = svc.result(svc.submit(ServeRequest(
+            "dse", name, sampler=cfg.sampler, budget=cfg.dse_budget,
+            seed=cfg.seed, dse_kwargs={"pop": cfg.dse_pop})),
+            timeout=600.0)
+    assert pr.ok, pr.error
+    assert dr.ok, dr.error
+    # identical engine object => memoized rows, bit-identical
+    assert np.array_equal(pr.value, np.asarray(
+        res.engine(res.pareto_configs)))
+    assert dr.value.pareto_configs == res.pareto_configs
+    assert np.array_equal(np.asarray(dr.value.pareto_objs),
+                          np.asarray(res.pareto_objs))
