@@ -449,6 +449,12 @@ class SurrogateEngine:
         chunking), and resolves each future with its slice. Returns the
         number of submissions served; their count is the cross-request
         batch occupancy tracked by ``stats.submits / stats.drains``.
+
+        Never raises on backend failure: if the fused wave throws, each
+        submission is re-evaluated on its own so only the offending
+        submissions' futures carry the exception — innocent requests
+        coalesced into the same wave still get their rows, and the
+        calling batcher thread stays alive.
         """
         with self._queue_cv:
             if not self._queue and timeout is not None:
@@ -461,10 +467,18 @@ class SurrogateEngine:
             flat.extend(cfgs)
         try:
             rows = self(flat)
-        except BaseException as e:                 # propagate to callers
-            for _, fut in batch:
-                fut.set_exception(e)
-            raise
+        except BaseException:      # noqa: BLE001 — isolate the bad apple
+            # Wave-failure isolation: a single bad submission (e.g. an
+            # out-of-range config) must not fail everything coalesced
+            # into this wave. Serve each submission individually; every
+            # future gets its own rows or its own exception.
+            for cfgs, fut in batch:
+                try:
+                    fut.set_result(self(cfgs))
+                except BaseException as e:  # noqa: BLE001 — to caller
+                    fut.set_exception(e)
+            self.stats.update(drains=1)
+            return len(batch)
         self.stats.update(drains=1)
         off = 0
         for cfgs, fut in batch:

@@ -177,8 +177,13 @@ class EvalService:
         self._requests: Dict[int, _InFlight] = {}
         self._rid = itertools.count()
         self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._batchers: Dict[int, threading.Thread] = {}   # id(engine)
+        self._closing = threading.Event()   # rejects new submissions
+        self._stop = threading.Event()      # stops the batcher threads
+        # id(engine) -> (thread, per-engine stop flag); the per-engine
+        # flag lets tenant replacement retire one batcher without
+        # touching the others.
+        self._batchers: Dict[
+            int, Tuple[threading.Thread, threading.Event]] = {}
 
     # -- tenants -----------------------------------------------------------
 
@@ -193,12 +198,15 @@ class EvalService:
         engine = as_engine(evaluate)
         ora = as_engine(oracle) if oracle is not None else None
         with self._lock:
+            old = self._tenants.get(name)
             self._tenants[name] = _Tenant(name, engine, sizes, oracle=ora,
                                           oracle_builder=oracle_builder)
         if self.coalesce:
             self._ensure_batcher(engine)
             if ora is not None:
                 self._ensure_batcher(ora)
+            if old is not None:
+                self._retire_batchers([old.engine, old._oracle])
         return name
 
     def warm_start(self, cfg, name: Optional[str] = None) -> str:
@@ -240,21 +248,55 @@ class EvalService:
         with self._lock:
             if key in self._batchers or self._stop.is_set():
                 return
-            th = threading.Thread(target=self._batch_loop, args=(engine,),
-                                  daemon=True,
+            stop = threading.Event()
+            th = threading.Thread(target=self._batch_loop,
+                                  args=(engine, stop), daemon=True,
                                   name=f"serve-batcher-{len(self._batchers)}")
-            self._batchers[key] = th
+            self._batchers[key] = (th, stop)
         th.start()
 
-    def _batch_loop(self, engine) -> None:
+    def _retire_batchers(self, engines) -> None:
+        """Stop and drop the batchers of `engines` that no current tenant
+        references anymore (tenant replacement): without this, the old
+        engine's thread would spin until service close."""
+        with self._lock:
+            live = set()
+            for t in self._tenants.values():
+                live.add(id(t.engine))
+                if t._oracle is not None:
+                    live.add(id(t._oracle))
+            dead = [(eng, self._batchers.pop(id(eng)))
+                    for eng in engines
+                    if eng is not None and id(eng) not in live
+                    and id(eng) in self._batchers]
+        for eng, (th, stop) in dead:
+            stop.set()
+            th.join(timeout=10.0)
+            eng.abort_pending(RuntimeError("tenant replaced"))
+
+    def _batch_loop(self, engine, stop: threading.Event) -> None:
         """One engine's continuous batching loop: each `drain` evaluates
         EVERYTHING queued — submissions that piled up while the previous
         wave was in the backend coalesce into one fused call (the
-        cross-request occupancy is ``stats.submits / stats.drains``)."""
-        while not self._stop.is_set():
-            engine.drain(timeout=self.drain_wait_s)
-        engine.drain(timeout=None)     # serve stragglers, then fail rest
-        engine.abort_pending(RuntimeError("EvalService closed"))
+        cross-request occupancy is ``stats.submits / stats.drains``).
+
+        The loop must outlive any single bad request: `drain` isolates
+        wave failures into the offending futures, and the extra guard
+        here keeps the thread alive even if drain itself ever throws —
+        a dead batcher would wedge every later request on this engine.
+        """
+        while not (self._stop.is_set() or stop.is_set()):
+            try:
+                engine.drain(timeout=self.drain_wait_s)
+            except BaseException:  # noqa: BLE001 — futures carry errors
+                pass
+        try:
+            engine.drain(timeout=None)   # serve stragglers, then fail rest
+        except BaseException:            # noqa: BLE001
+            pass
+        engine.abort_pending(RuntimeError(
+            "EvalService closed" if self._stop.is_set()
+            else "tenant replaced"))
 
     def _eval_for(self, tenant: _Tenant, engine=None):
         """The evaluator a request handler should use: a queued view
@@ -266,19 +308,40 @@ class EvalService:
     # -- request lifecycle -------------------------------------------------
 
     def submit(self, req: ServeRequest) -> int:
-        """Enqueue a request; returns a request id immediately."""
-        if self._stop.is_set():
+        """Enqueue a request; returns a request id immediately. Raises
+        (rather than failing the response) on malformed submissions:
+        unknown tenant, or predict/label configs out of range for the
+        tenant's space."""
+        if self._closing.is_set():
             raise RuntimeError("EvalService is closed")
         with self._lock:
-            if req.tenant not in self._tenants:
+            try:
+                tenant = self._tenants[req.tenant]
+            except KeyError:
                 raise KeyError(f"unknown tenant {req.tenant!r} "
-                               f"(have {sorted(self._tenants)})")
+                               f"(have {sorted(self._tenants)})") from None
+        self._validate(req, tenant)
+        with self._lock:
             rid = next(self._rid)
             rec = _InFlight(rid, req)
             self._requests[rid] = rec
         rec.submitted_s = time.perf_counter()
         self._pool.submit(self._run_request, rec)
         return rid
+
+    @staticmethod
+    def _validate(req: ServeRequest, tenant: _Tenant) -> None:
+        """Reject out-of-range predict/label configs at the door, before
+        they can reach (and blow up inside) a fused cross-request wave."""
+        if req.kind not in ("predict", "label"):
+            return
+        sizes = tenant.sizes
+        for cfg in req.configs or ():
+            if len(cfg) != len(sizes) or any(
+                    not 0 <= int(v) < s for v, s in zip(cfg, sizes)):
+                raise ValueError(
+                    f"config {tuple(cfg)} out of range for tenant "
+                    f"{tenant.name!r} (space sizes {sizes})")
 
     def _run_request(self, rec: _InFlight) -> None:
         req = rec.req
@@ -326,10 +389,28 @@ class EvalService:
         """Iterate a dse request's per-generation history entries as the
         search produces them (returns immediately-exhausted for
         predict/label). The yielded dicts are exactly the entries of the
-        final ``DSEResult.history`` (same objects, same order)."""
+        final ``DSEResult.history`` (same objects, same order).
+
+        Streaming is consuming: entries already yielded are gone, so a
+        second ``stream(rid)`` on a finished request returns immediately
+        empty instead of blocking. A stall longer than `timeout` while
+        the request is still running raises `TimeoutError`."""
         rec = self._rec(rid)
         while True:
-            entry = rec.stream_q.get(timeout=timeout)
+            if rec.done.is_set():
+                # Finished request: serve whatever is still queued, then
+                # stop — never block on an already-consumed stream.
+                try:
+                    entry = rec.stream_q.get_nowait()
+                except queue.Empty:
+                    return
+            else:
+                try:
+                    entry = rec.stream_q.get(timeout=timeout)
+                except queue.Empty:
+                    raise TimeoutError(
+                        f"request {rid} produced no stream entry within "
+                        f"{timeout}s") from None
             if entry is _InFlight._DONE:
                 return
             yield entry
@@ -369,13 +450,21 @@ class EvalService:
                 for name, t in tenants.items()}
 
     def close(self) -> None:
-        """Finish in-flight work, stop the batchers, shut the pool."""
-        self._stop.set()
+        """Finish in-flight work, then stop the batchers and the pool.
+
+        Order matters: the request pool drains FIRST, while the batchers
+        are still serving — a mid-flight handler (e.g. a DSE generation)
+        may submit more queries, and stopping the batchers early would
+        leave those futures unresolved until the view timeout. Only once
+        every handler has returned do the batchers stop and abort
+        whatever (nothing, by then) remains queued."""
+        self._closing.set()                # reject new submissions
+        self._pool.shutdown(wait=True)     # let in-flight handlers finish
+        self._stop.set()                   # now stop the batchers
         with self._lock:
             batchers = list(self._batchers.values())
-        for th in batchers:
+        for th, _ in batchers:
             th.join(timeout=10.0)
-        self._pool.shutdown(wait=True)
 
     def __enter__(self) -> "EvalService":
         return self

@@ -257,6 +257,127 @@ def test_request_errors_are_reported_not_fatal(space):
                          ServeRequest("predict", APP, configs=[]))
 
 
+def test_out_of_range_configs_rejected_at_submit(space):
+    """Malformed predict/label configs never reach a fused wave: submit
+    raises ValueError up front."""
+    _, _, sizes = space
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, _proxy(space), sizes)
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit(ServeRequest(
+                "predict", APP, configs=[(sizes[0],) + (0,) * (len(sizes) - 1)]))
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit(ServeRequest("predict", APP, configs=[(0,)]))
+        ok = svc.result(svc.submit(ServeRequest(
+            "predict", APP, configs=_rand_configs(sizes, 4, 0))),
+            timeout=60.0)
+        assert ok.ok, ok.error
+
+
+def test_backend_failure_isolated_to_offending_request(space):
+    """A backend exception mid-wave fails only the request that caused
+    it: innocent requests coalesced into the same wave still get rows,
+    and the batcher survives to serve later traffic."""
+    _, _, sizes = space
+    proxy = _proxy(space)
+    poison = tuple(0 for _ in sizes)
+
+    def flaky(configs):
+        time.sleep(0.005)              # widen the coalescing window
+        if poison in configs:
+            raise RuntimeError("poisoned config")
+        return proxy(configs)
+
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, flaky, sizes)
+        barrier = threading.Barrier(8)
+        rids = [None] * 8
+
+        def client(c):
+            barrier.wait()
+            cfgs = ([poison] if c == 0 else
+                    [tuple(max(1, int(v)) for v in cfg) for cfg in
+                     _rand_configs(sizes, 8, c)])
+            rids[c] = svc.submit(ServeRequest("predict", APP, configs=cfgs))
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        resps = svc.results(rids, timeout=60.0)
+        assert not resps[0].ok and "poisoned" in resps[0].error
+        for r in resps[1:]:
+            assert r.ok, r.error
+        # the batcher thread must still be alive and serving
+        again = svc.result(svc.submit(ServeRequest(
+            "predict", APP,
+            configs=[tuple(1 for _ in sizes)])), timeout=60.0)
+        assert again.ok, again.error
+
+
+def test_reregister_retires_old_batcher(space):
+    """Replacing a tenant stops the replaced engine's batcher thread
+    instead of leaking it until service close."""
+    _, _, sizes = space
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, _proxy(space), sizes)
+        assert len(svc._batchers) == 1
+        (old_thread, _), = svc._batchers.values()
+        svc.register(APP, _proxy(space), sizes)   # replacement
+        assert len(svc._batchers) == 1
+        (new_thread, _), = svc._batchers.values()
+        assert new_thread is not old_thread
+        old_thread.join(timeout=10.0)
+        assert not old_thread.is_alive()
+        ok = svc.result(svc.submit(ServeRequest(
+            "predict", APP, configs=_rand_configs(sizes, 4, 0))),
+            timeout=60.0)
+        assert ok.ok, ok.error
+
+
+def test_second_stream_returns_empty_not_blocking(space):
+    """stream() on an already-consumed request returns immediately
+    instead of blocking for the full timeout."""
+    _, _, sizes = space
+    with EvalService(coalesce=True) as svc:
+        svc.register(APP, _proxy(space), sizes)
+        rid = svc.submit(ServeRequest("dse", APP, sampler="nsga3",
+                                      budget=64, seed=0,
+                                      dse_kwargs={"pop": 8}))
+        first = list(svc.stream(rid))
+        assert first
+        t0 = time.perf_counter()
+        assert list(svc.stream(rid)) == []
+        assert time.perf_counter() - t0 < 5.0
+        # predict requests stream as immediately-empty too
+        prid = svc.submit(ServeRequest(
+            "predict", APP, configs=_rand_configs(sizes, 4, 0)))
+        svc.result(prid, timeout=60.0)
+        assert list(svc.stream(prid)) == []
+
+
+def test_close_finishes_in_flight_dse(space):
+    """close() drains the handler pool while the batchers are still
+    serving, so an in-flight DSE request completes normally instead of
+    timing out on an unresolvable future."""
+    _, _, sizes = space
+    svc = EvalService(coalesce=True)
+    try:
+        svc.register(APP, _proxy(space), sizes)
+        rid = svc.submit(ServeRequest("dse", APP, sampler="nsga3",
+                                      budget=96, seed=0,
+                                      dse_kwargs={"pop": 12}))
+    finally:
+        svc.close()                    # races the running search
+    resp = svc.result(rid, timeout=10.0)
+    assert resp.ok, resp.error
+    one_shot = dse_lib.SAMPLERS["nsga3"](
+        sizes, as_engine(_proxy(space)), 96, seed=0, pop=12)
+    assert resp.value.history == one_shot.history
+
+
 @pytest.mark.slow
 def test_warm_start_serves_bit_identical_to_run_staged(tmp_path):
     """A tenant warmed from the staged pipeline on a SHARED store serves
