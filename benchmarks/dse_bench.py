@@ -17,8 +17,17 @@ measures (and GATES) the sampler layer that sits on top:
     batched-program speedup is visible.
     Gates: mean hv_ratio >= 1.0 AND islands wall-clock <= serial.
 
+  * checkpoint overhead (``--checkpoint-every N`` > 0) — the crash-safe
+    search path: `run_nsga`/`run_islands` emitting a per-generation/epoch
+    `SearchCheckpoint` into a memory sink vs the plain run, interleaved
+    alternating-order reps. Gates: results bit-identical (front AND a
+    pickle-round-tripped mid-run kill/resume), pooled overhead <= 5%
+    wall-clock. Written separately to BENCH_fault.json (CI's chaos
+    smoke: ``--mode smoke --checkpoint-every 1``).
+
     PYTHONPATH=src python benchmarks/dse_bench.py [--mode smoke|full]
         [--budget 2048] [--seeds 0,1,2] [--out BENCH_dse.json]
+        [--checkpoint-every 0] [--fault-out BENCH_fault.json]
 
 Writes a JSON report (default BENCH_dse.json in the repo root) and prints
 CSV-ish rows like benchmarks/run.py. ``--mode smoke`` is the CI
@@ -161,6 +170,187 @@ def islands_vs_serial(app_name: str, budget: int, seeds, serial_pop: int,
     return rows
 
 
+def checkpoint_overhead_bench(app_name: str, budget: int, seed: int,
+                              pop: int, every: int, reps: int = 7,
+                              gate_pct: float = 5.0):
+    """Crash-safe-search cost: checkpointed vs plain run, both samplers.
+
+    The sink keeps the live checkpoint object (the serving path's
+    memory-tier `ArtifactStore.put`), so the gated overhead is the
+    search layer's own snapshot cost; disk-tier serialization is
+    reported per row (``pickle_final_ms``/``ckpt_bytes``) but not
+    gated. The evaluator is the ~free library proxy, so this is the
+    worst case: search + checkpoint cost with nothing to hide behind.
+    Correctness is asserted, not sampled: the checkpointed front must be
+    bit-identical to the plain run's, and resuming from a
+    pickle-round-tripped mid-run checkpoint (a simulated kill) must
+    reproduce it too.
+    """
+    import gc
+    import pickle
+
+    from repro.core import dse
+    from repro.core.islands import run_islands
+
+    sizes, evaluate = _setup(app_name)
+
+    def timed(fn):
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            out = fn()
+            return out, time.perf_counter() - t0
+        finally:
+            gc.enable()
+
+    arms = [
+        ("nsga3",
+         lambda **kw: dse.run_nsga(sizes, evaluate, budget, seed=seed,
+                                   pop=pop, **kw)),
+        ("islands",
+         lambda **kw: run_islands(sizes, evaluate, budget, seed=seed,
+                                  n_islands=4, pop=max(2, pop // 4),
+                                  epochs=4, migrate_k=4, **kw)),
+    ]
+    def measure_arm(sampler, run):
+        # The sink keeps the live object, like the serving path's
+        # memory-tier `ArtifactStore.put` — the gate isolates the
+        # SEARCH-layer checkpoint cost (state snapshots every barrier).
+        # Serialization cost is the store's business and is reported
+        # (not gated) below as pickle_final_ms / ckpt_bytes.
+        saved: list = []
+
+        def sink(ck):
+            saved.append(ck)
+
+        def ckpt_run():
+            saved.clear()
+            return run(checkpoint_every=every, checkpoint_sink=sink)
+
+        run()                             # untimed warmup (JIT, caches)
+        # interleaved pairs, ALTERNATING order (flipping which arm goes
+        # first each rep cancels the systematic position bias: the
+        # second run of a pair tends to be slower). The overhead
+        # estimate is min(ckpt) - min(plain): OS jitter is one-sided
+        # additive noise, so per-arm minima converge on the true cost
+        # while pairwise medians still carry several % of scatter on
+        # sub-second arms.
+        plain = ckpt = None
+        t_plain = t_ckpt = float("inf")
+        for rep in range(reps):
+            order = [("plain", run), ("ckpt", ckpt_run)]
+            if rep % 2:
+                order.reverse()
+            pair = {}
+            for arm, fn in order:
+                pair[arm] = timed(fn)
+            plain_r, tp = pair["plain"]
+            ckpt_r, tc = pair["ckpt"]
+            if tp < t_plain:
+                plain, t_plain = plain_r, tp
+            if tc < t_ckpt:
+                ckpt, t_ckpt = ckpt_r, tc
+        same = (ckpt.pareto_configs == plain.pareto_configs
+                and np.array_equal(ckpt.pareto_objs, plain.pareto_objs))
+        # kill/resume: restart from a mid-run checkpoint on a fresh
+        # engine — pickle round-tripped, like a crashed process would
+        # reload it — and the front must still match bit for bit
+        mid = pickle.loads(pickle.dumps(saved[len(saved) // 2]))
+        res = run(resume_from=mid)
+        resumed = (res.pareto_configs == plain.pareto_configs
+                   and np.array_equal(res.pareto_objs, plain.pareto_objs))
+        t0 = time.perf_counter()
+        blob = pickle.dumps(saved[-1])    # disk-tier serialization cost
+        t_pickle = time.perf_counter() - t0
+        diff = max(0.0, t_ckpt - t_plain)
+        overhead = diff / t_plain * 100.0
+        row = {"_diff_s": diff,
+               "sampler": sampler, "budget": budget, "seed": seed,
+               "checkpoint_every": every, "reps": reps,
+               "plain_s": round(t_plain, 3), "ckpt_s": round(t_ckpt, 3),
+               "overhead_pct": round(overhead, 2),
+               "n_checkpoints": len(saved),
+               "ckpt_bytes": len(blob),
+               "pickle_final_ms": round(t_pickle * 1e3, 3),
+               "bit_identical": bool(same),
+               "resume_bit_identical": bool(resumed)}
+        print(f"dse_bench,checkpoint,sampler={sampler},"
+              f"plain={t_plain:.3f}s,ckpt={t_ckpt:.3f}s,"
+              f"overhead={overhead:.2f}%,n_ckpt={len(saved)},"
+              f"identical={same},resume_identical={resumed}")
+        return row
+
+    # Gate on the POOLED overhead (both samplers' min-diffs over both
+    # plain minima): a single sub-second arm cannot resolve 5% against
+    # OS jitter, the pooled ~1s of search can. A sustained load window
+    # (another process hogging the box for seconds) can still poison
+    # every rep of one arm, so a pooled-gate miss RE-MEASURES — the
+    # checkpoint cost is deterministic and a retry under quieter
+    # conditions recovers it; only a persistent miss fails. Bit-identity
+    # is checked on every attempt and never retried around.
+    attempts = 0
+    for attempt in range(3):
+        attempts = attempt + 1
+        rows = [measure_arm(sampler, run) for sampler, run in arms]
+        pooled = max(0.0, 100.0 * sum(r["_diff_s"] for r in rows)
+                     / sum(r["plain_s"] for r in rows))
+        bad_bits = any(not r["bit_identical"]
+                       or not r["resume_bit_identical"] for r in rows)
+        if pooled <= gate_pct or bad_bits:
+            break
+        print(f"dse_bench,checkpoint,retry,pooled={pooled:.2f}%,"
+              f"attempt={attempts}")
+    for r in rows:
+        r.pop("_diff_s")
+    fails = [f"pooled checkpoint overhead {pooled:.2f}% > {gate_pct}% "
+             f"({attempts} attempts)"] if pooled > gate_pct else []
+    for r in rows:
+        if not r["bit_identical"]:
+            fails.append(f"{r['sampler']} checkpointed front != plain")
+        if not r["resume_bit_identical"]:
+            fails.append(f"{r['sampler']} resumed front != plain")
+    return {"rows": rows,
+            "gates": {"pooled_overhead_pct": round(pooled, 2),
+                      "gate_pct": gate_pct, "attempts": attempts,
+                      "ok": not fails}}, fails
+
+
+def _fault_report(args, mode: str):
+    """Run + persist the checkpoint-overhead section (BENCH_fault.json).
+
+    The timing budget has a 4096-evaluation floor regardless of the
+    search-comparison budget: resolving a 5% overhead gate needs enough
+    wall-clock per arm to rise above OS scheduling jitter."""
+    report, fails = checkpoint_overhead_bench(
+        args.app, max(args.budget, 4096), seed=0, pop=args.serial_pop,
+        every=args.checkpoint_every, gate_pct=args.ckpt_gate_pct)
+    report = {"mode": mode, "app": args.app, **report}
+    out = Path(args.fault_out)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"dse_bench,fault_report,{out}")
+    return fails
+
+
+def fault_main() -> None:
+    """Standalone entry for the checkpoint-overhead bench alone (the
+    `fault` section of benchmarks/run.py)."""
+    ap = argparse.ArgumentParser(
+        description="crash-safe search checkpoint-overhead bench")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--app", default="sobel")
+    ap.add_argument("--budget", type=int, default=2048)
+    ap.add_argument("--serial-pop", type=int, default=32)
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--ckpt-gate-pct", type=float, default=5.0)
+    ap.add_argument("--fault-out", default="BENCH_fault.json")
+    args = ap.parse_args()
+    fails = _fault_report(args, "smoke" if args.smoke else "full")
+    if fails:
+        raise SystemExit("dse_bench GATE FAILURES: " + "; ".join(fails))
+    print("dse_bench,fault_gates,ok")
+
+
 def _apply_gates(report) -> list:
     """The CI/acceptance gates; returns a list of failure strings."""
     fails = []
@@ -203,6 +393,11 @@ def main() -> None:
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--migrate-k", type=int, default=4)
     ap.add_argument("--out", default="BENCH_dse.json")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="> 0: also run the checkpoint-overhead bench "
+                         "(crash-safe search) and write --fault-out")
+    ap.add_argument("--ckpt-gate-pct", type=float, default=5.0)
+    ap.add_argument("--fault-out", default="BENCH_fault.json")
     args = ap.parse_args()
     mode = "smoke" if args.smoke else args.mode
     smoke = mode == "smoke"
@@ -226,6 +421,8 @@ def main() -> None:
 
     fails = _apply_gates(report)
     report["gates"]["ok"] = not fails
+    if args.checkpoint_every > 0:
+        fails += _fault_report(args, mode)
 
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")

@@ -11,7 +11,9 @@ ensemble vs sequential loop fits, see benchmarks/train_bench.py),
 pipeline (staged cold vs cached-resume + unified-vs-per-app surrogate
 fits, see benchmarks/pipeline_bench.py), serve (cross-request batching
 vs serial request handling in the evaluation daemon, see
-benchmarks/serve_bench.py).
+benchmarks/serve_bench.py), fault (crash-safe search: checkpointed vs
+plain DSE overhead + bit-identity gates, see
+benchmarks/dse_bench.py::fault_main, writes BENCH_fault.json).
 """
 from __future__ import annotations
 
@@ -42,7 +44,7 @@ def main() -> None:
                     help="smaller datasets/epochs")
     ap.add_argument("--sections", default="tables,models,dse,kernels,lm,"
                                           "roofline,bridge,engine,dataset,"
-                                          "train,pipeline,serve")
+                                          "train,pipeline,serve,fault")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as T
@@ -89,6 +91,9 @@ def main() -> None:
     if "serve" in sections:
         from benchmarks import serve_bench
         _run_gated_bench("serve_bench", serve_bench.main, args.quick)
+    if "fault" in sections:
+        from benchmarks import dse_bench
+        _run_gated_bench("fault_bench", dse_bench.fault_main, args.quick)
     print(f"# total benchmark time: {time.time() - t0:.1f}s")
 
 

@@ -78,10 +78,16 @@ class StoreStats:
     Thread-safe: `record` holds an internal lock, so the dict
     read-modify-write (``d[stage] = d.get(stage, 0) + 1``) cannot lose
     counts when many serving sessions hit one resident store; `as_dict`
-    snapshots both dicts under the same lock."""
+    snapshots both dicts under the same lock.
+
+    ``quarantines`` lists the keys whose disk pickle was found corrupt
+    and renamed aside (`ArtifactStore.get`) — a non-empty list after a
+    crash is the fingerprint of a torn write by an OLD store version or
+    external file damage, never of the store's own atomic writer."""
     hits: Dict[str, int] = field(default_factory=dict)
     misses: Dict[str, int] = field(default_factory=dict)
     events: list = field(default_factory=list)   # (stage, "hit"|"miss", key)
+    quarantines: list = field(default_factory=list)   # corrupt-pickle keys
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -92,9 +98,14 @@ class StoreStats:
             d[stage] = d.get(stage, 0) + 1
             self.events.append((stage, "hit" if hit else "miss", key))
 
+    def record_quarantine(self, key: str) -> None:
+        with self._lock:
+            self.quarantines.append(key)
+
     def as_dict(self) -> Dict[str, Dict[str, int]]:
         with self._lock:
-            return {"hits": dict(self.hits), "misses": dict(self.misses)}
+            return {"hits": dict(self.hits), "misses": dict(self.misses),
+                    "quarantines": list(self.quarantines)}
 
 
 def _to_numpy_tree(obj: Any) -> Any:
@@ -171,13 +182,35 @@ class ArtifactStore:
         if p is not None and p.exists():
             # `os.replace` publishes pickles atomically, so this read sees
             # a complete file even mid-overwrite by a concurrent writer
-            with open(p, "rb") as f:
-                obj = pickle.load(f)
+            try:
+                with open(p, "rb") as f:
+                    obj = pickle.load(f)
+            except Exception:
+                # A corrupt/torn pickle (external damage — the store's own
+                # writer is atomic) must not raise into the caller as if
+                # the artifact existed: quarantine the file aside and
+                # report a miss, so `get_or_build` rebuilds it.
+                self._quarantine(key, p)
+                raise KeyError(key) from None
             with self._mem_lock:
                 # first load wins: every caller then shares one object
                 obj = self._memory.setdefault(key, obj)
             return obj
         raise KeyError(key)
+
+    def _quarantine(self, key: str, p: Path) -> None:
+        """Rename a corrupt disk pickle to ``<key>.pkl.corrupt`` (numeric
+        suffix if one is already parked) and count it in the stats."""
+        q = Path(f"{p}.corrupt")
+        i = 0
+        while q.exists():
+            i += 1
+            q = Path(f"{p}.corrupt{i}")
+        try:
+            os.replace(p, q)
+        except OSError:
+            return            # concurrent reader already quarantined it
+        self.stats.record_quarantine(key)
 
     def put(self, key: str, obj: Any, *, memory_only: bool = False) -> Any:
         with self._key_lock(key):
@@ -227,10 +260,17 @@ class ArtifactStore:
         Concurrent-safe: callers racing on one key serialize on its key
         lock, so exactly one of them runs ``build()`` (recorded as the
         sole miss) and the rest are recorded as hits of the fresh
-        artifact — hit + miss counts always sum to the number of calls."""
+        artifact — hit + miss counts always sum to the number of calls.
+
+        Fault-tolerant: a corrupt disk pickle surfaces from `get` as a
+        `KeyError` (the file is quarantined as ``*.corrupt``), which this
+        path treats as a plain miss and rebuilds — a damaged cache entry
+        can cost a rebuild but never an exception or a wrong artifact."""
         with self._key_lock(key):
-            if self.has(key):
-                self.stats.record(stage, True, key)
-                return self.get(key)
-            self.stats.record(stage, False, key)
-            return self.put(key, build(), memory_only=memory_only)
+            try:
+                obj = self.get(key)
+            except KeyError:
+                self.stats.record(stage, False, key)
+                return self.put(key, build(), memory_only=memory_only)
+            self.stats.record(stage, True, key)
+            return obj

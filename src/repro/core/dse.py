@@ -74,6 +74,67 @@ class DSEResult:
     stats: Optional[Dict] = None
 
 
+@dataclass
+class SearchCheckpoint:
+    """Complete, picklable state of a generation-granular sampler at a
+    generation (nsga2/nsga3) or epoch (islands) boundary.
+
+    Captures everything the search carries forward — population(s) and
+    their objective rows, the evaluated-config archive, the exact RNG
+    stream state(s) (`np.random.Generator.bit_generator.state`), the
+    convergence history, the budget spent, and the hypervolume reference
+    fixed at generation 0 — so a run restarted from a checkpoint replays
+    **bit-identically** to the uninterrupted run: same final front, same
+    hypervolume trajectory (the chaos-harness property,
+    tests/test_fault_dse.py). The engine memo cache is deliberately NOT
+    captured: evaluators are deterministic, so a fresh cache re-derives
+    identical rows (docs/fault_tolerance.md).
+
+    Produced by ``nsga_steps`` / ``islands_steps`` via their
+    ``checkpoint_every`` / ``checkpoint_sink`` kwargs (the sink is any
+    ``Callable[[SearchCheckpoint], None]``; the pipeline and the serving
+    daemon plug in `ArtifactStore.put`, whose atomic write makes torn
+    checkpoints impossible) and consumed via ``resume_from``. `meta`
+    pins the run parameters (sizes, budget, pop, seed, ...); resuming
+    under different parameters raises instead of silently diverging.
+
+    Scalar NSGA fields (``population`` .. ``prev_key``) are None for
+    island checkpoints and vice versa (``islands``/``front_X``/
+    ``front_F``).
+    """
+    sampler: str
+    generation: int
+    evaluated: int
+    history: List[Dict]
+    hv_ref: np.ndarray
+    meta: Dict
+    rng_state: Optional[Dict] = None
+    population: Optional[np.ndarray] = None
+    pop_objs: Optional[np.ndarray] = None
+    archive_X: Optional[np.ndarray] = None
+    archive_F: Optional[np.ndarray] = None
+    stale: int = 0
+    prev_key: Optional[tuple] = None
+    islands: Optional[List[Dict]] = None
+    front_X: Optional[np.ndarray] = None
+    front_F: Optional[np.ndarray] = None
+
+
+def _check_checkpoint(ck: "SearchCheckpoint", meta: Dict) -> None:
+    """Refuse to resume a checkpoint under different run parameters —
+    silent divergence would break the bit-identity contract."""
+    if not isinstance(ck, SearchCheckpoint):
+        raise ValueError("resume_from must be a SearchCheckpoint, got "
+                         f"{type(ck).__name__}")
+    bad = {k: (ck.meta.get(k), v) for k, v in meta.items()
+           if ck.meta.get(k) != v}
+    if bad:
+        raise ValueError(
+            "checkpoint does not match this run: " + "; ".join(
+                f"{k}: checkpoint={a!r} != run={b!r}"
+                for k, (a, b) in sorted(bad.items())))
+
+
 def as_engine(evaluate: EvalFn) -> "SurrogateEngine":
     """Wrap a plain evaluator in a caching `SurrogateEngine` (idempotent).
 
@@ -586,7 +647,11 @@ def run_tpe(sizes: Sequence[int], evaluate: EvalFn, budget: int,
 def nsga_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                seed: int = 0, pop: int = 64, variant: str = "nsga3",
                stagnation: int = 5, ref_divisions: int = 6,
-               init: Optional[Sequence[Config]] = None) -> StepGen:
+               init: Optional[Sequence[Config]] = None,
+               checkpoint_every: int = 0,
+               checkpoint_sink: Optional[Callable[["SearchCheckpoint"],
+                                                  None]] = None,
+               resume_from: Optional["SearchCheckpoint"] = None) -> StepGen:
     """Generation-granular `run_nsga`: yields each `DSEResult.history`
     entry as the generation completes, returns the final result.
 
@@ -595,30 +660,103 @@ def nsga_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
     interleave, and per-generation Pareto/hypervolume updates stream to
     the client while the search runs. ``run_nsga`` is the one-shot
     wrapper (`drain_steps`), so both paths are the same instructions.
+
+    Crash safety: with ``checkpoint_every=k`` and a ``checkpoint_sink``,
+    every k-th completed generation emits a `SearchCheckpoint` (built
+    BEFORE the yield, so a consumer killed mid-stream has the state of
+    every entry it saw); ``resume_from`` restores one and continues the
+    run **bit-identically** to never having stopped — same front, same
+    hypervolume trajectory (resume restores the RNG stream state, and
+    the deterministic evaluator re-derives any engine-cache rows the
+    crash lost). Resuming under different run parameters raises.
     """
     engine = as_engine(evaluate)
     rng = np.random.default_rng(seed)
-    P = np.stack([rng.integers(0, s, pop) for s in sizes], 1)
-    seeded = _clip_init(init, sizes, pop)
-    if seeded:
-        P[:len(seeded)] = np.asarray(seeded, np.int64)
-    F = engine([tuple(r) for r in P])
-    evaluated = pop
-    refs = das_dennis(F.shape[1], ref_divisions)
-    archive_X: List[Config] = [tuple(r) for r in P]
-    archive_F = [F]
-    stale = 0
-    prev_key = None
-    history: List[Dict] = []
-    hv_ref = hv_reference(F)
+    meta = {"sampler": variant, "sizes": tuple(int(s) for s in sizes),
+            "budget": int(budget), "pop": int(pop), "seed": int(seed),
+            "stagnation": int(stagnation),
+            "ref_divisions": int(ref_divisions)}
+
+    # incremental archive snapshots: converting the WHOLE tuple archive
+    # per checkpoint is O(evaluated) and dominates checkpoint cost at
+    # checkpoint_every=1 (gated <= 5% overhead in benchmarks/dse_bench);
+    # instead only the rows added since the last checkpoint are converted
+    # and appended. The cached arrays are never mutated in place, so
+    # handing them to the sink without a copy is safe.
+    ck_arch = {"nX": 0, "X": None, "nF": 0, "F": None}
+
+    def _arch_snapshot():
+        if ck_arch["nX"] < len(archive_X):
+            new = np.asarray(archive_X[ck_arch["nX"]:], np.int64)
+            ck_arch["X"] = new if ck_arch["X"] is None else \
+                np.concatenate([ck_arch["X"], new], 0)
+            ck_arch["nX"] = len(archive_X)
+        if ck_arch["nF"] < len(archive_F):
+            blocks = archive_F[ck_arch["nF"]:]
+            ck_arch["F"] = np.concatenate(
+                ([ck_arch["F"]] if ck_arch["F"] is not None else [])
+                + list(blocks), 0)
+            ck_arch["nF"] = len(archive_F)
+        return ck_arch["X"], ck_arch["F"]
+
+    def maybe_checkpoint() -> None:
+        if not checkpoint_every or checkpoint_sink is None or \
+                (len(history) - 1) % checkpoint_every != 0:
+            return
+        aX, aF = _arch_snapshot()
+        # shallow history snapshot: entries are append-only and never
+        # mutated after record(), so copying the list suffices (resume
+        # deep-copies on restore)
+        checkpoint_sink(SearchCheckpoint(
+            sampler=variant, generation=len(history) - 1,
+            evaluated=evaluated, history=list(history),
+            hv_ref=np.array(hv_ref, np.float64), meta=dict(meta),
+            rng_state=rng.bit_generator.state,
+            population=np.array(P, np.int64),
+            pop_objs=np.array(F, np.float64),
+            archive_X=aX, archive_F=aF,
+            stale=stale,
+            prev_key=(tuple(tuple(int(v) for v in row) for row in prev_key)
+                      if prev_key is not None else None)))
+
+    if resume_from is not None:
+        ck = resume_from
+        _check_checkpoint(ck, meta)
+        rng.bit_generator.state = ck.rng_state
+        P = np.array(ck.population, np.int64)
+        F = np.array(ck.pop_objs, np.float64)
+        evaluated = int(ck.evaluated)
+        refs = das_dennis(F.shape[1], ref_divisions)
+        archive_X = [tuple(int(v) for v in r) for r in ck.archive_X]
+        archive_F = [np.array(ck.archive_F, np.float64)]
+        stale = int(ck.stale)
+        prev_key = ck.prev_key
+        history = [dict(h) for h in ck.history]
+        hv_ref = np.array(ck.hv_ref, np.float64)
+    else:
+        P = np.stack([rng.integers(0, s, pop) for s in sizes], 1)
+        seeded = _clip_init(init, sizes, pop)
+        if seeded:
+            P[:len(seeded)] = np.asarray(seeded, np.int64)
+        F = engine([tuple(r) for r in P])
+        evaluated = pop
+        refs = das_dennis(F.shape[1], ref_divisions)
+        archive_X = [tuple(r) for r in P]
+        archive_F = [F]
+        stale = 0
+        prev_key = None
+        history = []
+        hv_ref = hv_reference(F)
 
     def record(parent_front: np.ndarray) -> None:
         history.append({"generation": len(history), "evaluated": evaluated,
                         "front_size": len(parent_front),
                         "hypervolume": hypervolume(parent_front, hv_ref)})
 
-    record(F[non_dominated_sort(F)[0]])
-    yield history[-1]
+    if resume_from is None:
+        record(F[non_dominated_sort(F)[0]])
+        maybe_checkpoint()
+        yield history[-1]
     while evaluated < budget:
         Q = _crossover_mutate(P, sizes, rng)
         FQ = engine([tuple(r) for r in Q])
@@ -658,6 +796,7 @@ def nsga_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
             stale = 0
         prev_key = key
         record(F[non_dominated_sort(F)[0]])
+        maybe_checkpoint()
         yield history[-1]
     allF = np.concatenate(archive_F, 0)
     pc, po = pareto_front(archive_X, allF)
@@ -668,7 +807,10 @@ def nsga_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
 def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
              seed: int = 0, pop: int = 64, variant: str = "nsga3",
              stagnation: int = 5, ref_divisions: int = 6,
-             init: Optional[Sequence[Config]] = None) -> DSEResult:
+             init: Optional[Sequence[Config]] = None,
+             checkpoint_every: int = 0,
+             checkpoint_sink: Optional[Callable] = None,
+             resume_from: Optional[SearchCheckpoint] = None) -> DSEResult:
     """NSGA-II / NSGA-III with restart-on-stagnation (the paper's DSE).
 
     Args:
@@ -686,11 +828,17 @@ def run_nsga(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         init:          warm-start configs seeded into the initial
                        population (e.g. a previous run's Pareto front);
                        the remainder is filled with uniform randoms.
+        checkpoint_every / checkpoint_sink / resume_from:
+                       crash safety — see `nsga_steps` /
+                       `SearchCheckpoint`.
     """
     return drain_steps(nsga_steps(sizes, evaluate, budget, seed=seed,
                                   pop=pop, variant=variant,
                                   stagnation=stagnation,
-                                  ref_divisions=ref_divisions, init=init))
+                                  ref_divisions=ref_divisions, init=init,
+                                  checkpoint_every=checkpoint_every,
+                                  checkpoint_sink=checkpoint_sink,
+                                  resume_from=resume_from))
 
 
 def _run_islands(*args, **kwargs) -> DSEResult:
@@ -726,6 +874,12 @@ def iter_sampler(sampler: str, sizes: Sequence[int], evaluate: EvalFn,
     no incremental form — they run to completion on the first advance and
     replay their history, so streaming is post-hoc but the protocol (and
     bit-identity with ``SAMPLERS[name]``) is preserved.
+
+    The stepping samplers also accept the crash-safety kwargs
+    ``checkpoint_every=`` / ``checkpoint_sink=`` / ``resume_from=``
+    (see `SearchCheckpoint`); the sequential ones cannot checkpoint —
+    passing those kwargs for them raises rather than silently running
+    without crash safety.
     """
     if sampler in ("nsga2", "nsga3"):
         return nsga_steps(sizes, evaluate, budget, seed=seed,
@@ -736,6 +890,12 @@ def iter_sampler(sampler: str, sizes: Sequence[int], evaluate: EvalFn,
     if sampler not in SAMPLERS:
         raise ValueError(f"unknown sampler {sampler!r} "
                          f"(have {sorted(SAMPLERS)})")
+    if kwargs.pop("checkpoint_every", 0) or \
+            kwargs.pop("checkpoint_sink", None) is not None or \
+            kwargs.pop("resume_from", None) is not None:
+        raise ValueError(
+            f"sampler {sampler!r} runs to completion in one step and "
+            "cannot checkpoint or resume (only nsga2/nsga3/islands can)")
 
     def replay() -> StepGen:
         res = SAMPLERS[sampler](sizes, evaluate, budget, seed=seed,

@@ -82,6 +82,12 @@ class EngineStats:
         drains:       `SurrogateEngine.drain` waves that evaluated at
                       least one submission; ``submits / drains`` is the
                       mean cross-request batch occupancy.
+        retries:      backend calls re-issued by the engine's
+                      `RetryPolicy` after a transient fault.
+        quarantined:  configs whose objective rows stayed non-finite
+                      after the nan-guard's re-evaluations; their rows
+                      are served as +inf (never Pareto-optimal) and the
+                      configs are recorded in ``engine.quarantined``.
         eval_time_s:  time inside the backend batch function.
         wall_time_s:  end-to-end time inside the engine (incl. cache
                       assembly).
@@ -95,6 +101,8 @@ class EngineStats:
     max_batch: int = 0
     submits: int = 0
     drains: int = 0
+    retries: int = 0
+    quarantined: int = 0
     eval_time_s: float = 0.0
     wall_time_s: float = 0.0
 
@@ -136,6 +144,8 @@ class EngineStats:
                     "padded": self.padded, "chunks": self.chunks,
                     "max_batch": self.max_batch,
                     "submits": self.submits, "drains": self.drains,
+                    "retries": self.retries,
+                    "quarantined": self.quarantined,
                     "eval_time_s": round(self.eval_time_s, 4),
                     "wall_time_s": round(self.wall_time_s, 4)}
         snap["cache_hit_rate"] = round(
@@ -299,12 +309,31 @@ class SurrogateEngine:
                      the uncertainty block served by ``uncertainty`` /
                      ``predict_with_uncertainty``. None = all columns are
                      objectives (no uncertainty available).
+        retry:       `repro.distributed.fault.RetryPolicy` applied around
+                     every backend call: transient faults (HostFailure /
+                     StragglerStall — anything `TransientError`) are
+                     re-issued with bounded exponential backoff and
+                     counted in ``stats.retries``. None = no retry
+                     (backend exceptions propagate on first raise).
+        nan_guard:   guard every backend result against non-finite
+                     objective rows: offending configs are re-evaluated
+                     individually (``nan_retries`` extra attempts each —
+                     heals one-shot corruption like an injected NaN wave
+                     bit-identically); configs whose rows STAY non-finite
+                     are quarantined — their row is served as +inf (a
+                     dominated point that can never poison a Pareto
+                     front), the config key lands in
+                     ``engine.quarantined``, and ``stats.quarantined``
+                     counts them. On by default: a single NaN row from a
+                     flaky backend must not invalidate a 10^5-config
+                     search.
     """
 
     def __init__(self, batch_fn: BatchFn, *, backend: str = "generic",
                  chunk_size: int = 512, fixed_shape: bool = False,
                  cache: bool = True, max_cache: int = 1_000_000,
-                 obj_cols: Optional[int] = None):
+                 obj_cols: Optional[int] = None, retry=None,
+                 nan_guard: bool = True, nan_retries: int = 2):
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         self._batch_fn = batch_fn
@@ -314,6 +343,10 @@ class SurrogateEngine:
         self.cache_enabled = cache
         self.max_cache = max_cache
         self.obj_cols = obj_cols
+        self.retry = retry
+        self.nan_guard = nan_guard
+        self.nan_retries = int(nan_retries)
+        self.quarantined: set = set()
         self._cache: Dict[Config, np.ndarray] = {}
         self.stats = EngineStats()
         # one engine may serve several concurrent samplers (the island
@@ -529,6 +562,44 @@ class SurrogateEngine:
             b <<= 1
         return min(b, self.chunk_size)
 
+    def _eval_backend(self, chunk: List[Config]) -> np.ndarray:
+        """One backend call, re-issued under `self.retry` on transient
+        faults (`stats.retries` counts every re-issue)."""
+        if self.retry is None:
+            return np.asarray(self._batch_fn(chunk))
+        return np.asarray(self.retry.call(
+            self._batch_fn, chunk,
+            on_retry=lambda e: self.stats.update(retries=1)))
+
+    def _guard_rows(self, part: List[Config], y: np.ndarray) -> np.ndarray:
+        """Non-finite-row guard: heal corrupted rows by re-evaluating the
+        offending configs individually; quarantine persistent offenders.
+
+        One-shot corruption (an injected NaN wave, a transient numeric
+        fault) heals bit-identically because the re-evaluation hits the
+        same deterministic backend. A config whose row is non-finite on
+        every attempt is quarantined: its row becomes +inf (strictly
+        dominated, so it can never contaminate a Pareto front), its key
+        joins ``self.quarantined`` and ``stats.quarantined`` counts it.
+        """
+        bad = np.where(~np.all(np.isfinite(y), axis=1))[0]
+        if not len(bad):
+            return y
+        y = np.array(y, copy=True)
+        for j in bad:
+            healed = False
+            for _ in range(self.nan_retries):
+                row = self._eval_backend([part[j]])[0]
+                if np.all(np.isfinite(row)):
+                    y[j] = row
+                    healed = True
+                    break
+            if not healed:
+                y[j] = np.inf
+                self.quarantined.add(part[j])
+                self.stats.update(quarantined=1)
+        return y
+
     def _eval_chunked(self, configs: List[Config]) -> np.ndarray:
         rows = []
         i, n = 0, len(configs)
@@ -539,12 +610,15 @@ class SurrogateEngine:
                 b = self._bucket(take)
                 self.stats.update(padded=b - take)
                 chunk = chunk + [chunk[-1]] * (b - take)
-            y = np.asarray(self._batch_fn(chunk))
+            y = self._eval_backend(chunk)
             if y.shape[0] != len(chunk):
                 raise ValueError(
                     f"backend returned {y.shape[0]} rows for "
                     f"{len(chunk)} configs")
-            rows.append(y[:take])
+            part = y[:take]
+            if self.nan_guard and not np.all(np.isfinite(part)):
+                part = self._guard_rows(configs[i:i + take], part)
+            rows.append(part)
             self.stats.update(chunks=1)
             i += take
         return np.concatenate(rows, 0)

@@ -59,12 +59,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.dse import (Config, DSEResult, EvalFn, StepGen,
-                            _crossover_mutate, _niche_select, as_engine,
-                            crowding_distance, das_dennis, drain_steps,
-                            hv_reference, hypervolume,
-                            non_dominated_ranks_batched, non_dominated_sort,
-                            pareto_front, tpe_propose)
+from repro.core.dse import (Config, DSEResult, EvalFn, SearchCheckpoint,
+                            StepGen, _check_checkpoint, _crossover_mutate,
+                            _niche_select, as_engine, crowding_distance,
+                            das_dennis, drain_steps, hv_reference,
+                            hypervolume, non_dominated_ranks_batched,
+                            non_dominated_sort, pareto_front, tpe_propose)
 
 # the classic mixed fleet (island i runs DEFAULT_SAMPLERS[i % 4]); pass as
 # `samplers=` explicitly — the default fleet is homogeneous nsga3 cones,
@@ -617,7 +617,9 @@ def islands_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                   samplers: Optional[Sequence[str]] = None, epochs: int = 4,
                   migrate_k: int = 4, pop: int = 16,
                   partition_refs: bool = True, migration: str = "broadcast",
-                  nds_backend: str = "auto") -> StepGen:
+                  nds_backend: str = "auto", checkpoint_every: int = 0,
+                  checkpoint_sink=None,
+                  resume_from: Optional[SearchCheckpoint] = None) -> StepGen:
     """Epoch-granular `run_islands`: yields each epoch-boundary
     `DSEResult.history` entry (merged front size, hypervolume, per-island
     fronts) as it is produced and returns the final result — the serving
@@ -648,6 +650,19 @@ def islands_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         n_islands / samplers / epochs / migrate_k / pop / partition_refs
         / migration / nds_backend:
                    see `IslandConfig`.
+        checkpoint_every / checkpoint_sink / resume_from:
+                   crash safety (see `repro.core.dse.SearchCheckpoint`):
+                   every ``checkpoint_every``-th epoch boundary emits the
+                   fleet state — per-island populations, archives, RNG
+                   stream states, cones and reference rays, plus the
+                   merged front and history — through ``checkpoint_sink``
+                   just after migration; ``resume_from`` restores it and
+                   continues **bit-identically** to an uninterrupted run.
+                   Only all-NSGA fleets checkpoint (the sequential
+                   fallback path has no incremental form — passing these
+                   kwargs for it raises). ``nds_backend`` is free to
+                   change across a resume: both backends are
+                   bit-identical.
 
     Returns:
         `DSEResult` whose front is the merged global archive's
@@ -662,6 +677,13 @@ def islands_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
     names, islands = _build_fleet(sizes, seed, n_islands, samplers, pop,
                                   partition_refs)
     if any(not isinstance(isl, _NsgaIsland) for isl in islands):
+        if checkpoint_every or checkpoint_sink is not None \
+                or resume_from is not None:
+            raise ValueError(
+                f"island fleet {tuple(names)} contains sequential "
+                "samplers and runs on the one-shot run_islands_ref path, "
+                "which cannot checkpoint or resume (use an all-nsga2/"
+                "nsga3 fleet for crash safety)")
         res = run_islands_ref(
             sizes, evaluate, budget, seed, n_islands=n_islands,
             samplers=samplers, epochs=epochs, migrate_k=migrate_k,
@@ -673,14 +695,88 @@ def islands_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
     engine = as_engine(evaluate)
     total_gens, boundaries = _schedule(budget, n_islands, pop, epochs)
     d = len(sizes)
+    # nds_backend deliberately excluded: numpy and jax ranks are
+    # bit-identical, so a resume may switch backends freely
+    meta = {"sampler": "islands", "sizes": tuple(int(s) for s in sizes),
+            "budget": int(budget), "seed": int(seed),
+            "n_islands": int(n_islands), "samplers": tuple(names),
+            "epochs": int(epochs), "migrate_k": int(migrate_k),
+            "pop": int(pop), "partition_refs": bool(partition_refs),
+            "migration": migration}
 
-    history: List[Dict] = []
-    evaluated = 0
-    hv_ref: Optional[np.ndarray] = None
-    pc: List[Config] = []
-    po = np.zeros((0, 1))
+    # incremental per-island archive snapshots: converting every island's
+    # whole tuple archive per checkpoint is O(evaluated); only the rows
+    # added since the last checkpoint are converted and appended (gated
+    # <= 5% overhead in benchmarks/dse_bench). The cached arrays are
+    # never mutated in place, so the sink gets them without a copy.
+    ck_arch: Dict[int, Dict] = {}
 
-    for gen in range(1, total_gens + 1):
+    def _arch_snapshot(i: int, isl):
+        c = ck_arch.setdefault(i, {"nX": 0, "X": None, "nF": 0, "F": None})
+        if c["nX"] < len(isl.arch_X):
+            new = np.asarray(isl.arch_X[c["nX"]:], np.int64)
+            c["X"] = new if c["X"] is None else \
+                np.concatenate([c["X"], new], 0)
+            c["nX"] = len(isl.arch_X)
+        if c["nF"] < len(isl.arch_F):
+            c["F"] = np.concatenate(
+                ([c["F"]] if c["F"] is not None else [])
+                + list(isl.arch_F[c["nF"]:]), 0)
+            c["nF"] = len(isl.arch_F)
+        return c["X"], c["F"]
+
+    def _island_state(i: int, isl) -> Dict:
+        aX, aF = _arch_snapshot(i, isl)
+        return {"name": isl.name,
+                "rng_state": isl.rng.bit_generator.state,
+                "P": np.array(isl.P, np.int64),
+                "F": np.array(isl.F, np.float64),
+                "arch_X": aX, "arch_F": aF,
+                "cone": isl.cone,
+                "refs": np.array(isl.refs, np.float64)}
+
+    def maybe_checkpoint(gen: int) -> None:
+        if not checkpoint_every or checkpoint_sink is None or \
+                len(history) % checkpoint_every != 0:
+            return
+        # shallow history snapshot: entries are append-only, never
+        # mutated after record (resume deep-copies on restore)
+        checkpoint_sink(SearchCheckpoint(
+            sampler="islands", generation=gen, evaluated=evaluated,
+            history=list(history),
+            hv_ref=np.array(hv_ref, np.float64), meta=dict(meta),
+            islands=[_island_state(i, isl)
+                     for i, isl in enumerate(islands)],
+            front_X=np.asarray(pc, np.int64).reshape(len(pc), d),
+            front_F=np.array(po, np.float64)))
+
+    if resume_from is not None:
+        ck = resume_from
+        _check_checkpoint(ck, meta)
+        for isl, st in zip(islands, ck.islands):
+            isl.rng.bit_generator.state = st["rng_state"]
+            isl.P = np.array(st["P"], np.int64)
+            isl.F = np.array(st["F"], np.float64)
+            isl.arch_X = [tuple(int(v) for v in r) for r in st["arch_X"]]
+            isl.arch_F = [np.array(st["arch_F"], np.float64)]
+            isl._seen = set(isl.arch_X)
+            isl.cone = st["cone"]
+            isl.refs = np.array(st["refs"], np.float64)
+        history = [dict(h) for h in ck.history]
+        evaluated = int(ck.evaluated)
+        hv_ref = np.array(ck.hv_ref, np.float64)
+        pc = [tuple(int(v) for v in r) for r in ck.front_X]
+        po = np.array(ck.front_F, np.float64)
+        start_gen = int(ck.generation)
+    else:
+        history = []
+        evaluated = 0
+        hv_ref = None
+        pc = []
+        po = np.zeros((0, 1))
+        start_gen = 0
+
+    for gen in range(start_gen + 1, total_gens + 1):
         first = islands[0].P is None
         if first:
             # generation 1 proposes raw randoms (no freshen), like the
@@ -716,6 +812,7 @@ def islands_steps(sizes: Sequence[int], evaluate: EvalFn, budget: int,
             pc, po, hv_ref = _epoch_boundary(
                 islands, names, migration, migrate_k, hv_ref, gen,
                 evaluated, history)
+            maybe_checkpoint(gen)
             yield history[-1]
 
     # the final generation is always an epoch boundary, so (pc, po) is the
@@ -729,7 +826,10 @@ def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
                 samplers: Optional[Sequence[str]] = None, epochs: int = 4,
                 migrate_k: int = 4, pop: int = 16,
                 partition_refs: bool = True, migration: str = "broadcast",
-                nds_backend: str = "auto") -> DSEResult:
+                nds_backend: str = "auto", checkpoint_every: int = 0,
+                checkpoint_sink=None,
+                resume_from: Optional[SearchCheckpoint] = None
+                ) -> DSEResult:
     """Run the island-model DSE as one batched array program; drop-in
     alternative to the serial samplers (one-shot wrapper over
     `islands_steps` — see that generator for the streaming form).
@@ -756,7 +856,8 @@ def run_islands(sizes: Sequence[int], evaluate: EvalFn, budget: int,
         sizes, evaluate, budget, seed, n_islands=n_islands,
         samplers=samplers, epochs=epochs, migrate_k=migrate_k, pop=pop,
         partition_refs=partition_refs, migration=migration,
-        nds_backend=nds_backend))
+        nds_backend=nds_backend, checkpoint_every=checkpoint_every,
+        checkpoint_sink=checkpoint_sink, resume_from=resume_from))
 
 
 def library_proxy_evaluator(app, entries: Dict[str, Sequence]) -> EvalFn:

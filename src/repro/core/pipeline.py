@@ -78,6 +78,12 @@ class PipelineConfig:
     early_stop_patience: int = 0    # >0: early stopping on a val split
     train_backend: str = "scan"     # scan | loop (reference)
     artifact_dir: Optional[str] = None  # on-disk artifact cache root
+    dse_checkpoint_every: int = 0   # >0: checkpoint the search every N
+                                    # generations into the store; a rerun
+                                    # of the same config resumes from the
+                                    # last checkpoint (generational
+                                    # samplers only; tpe/random run to
+                                    # completion in one step and ignore it)
 
     @staticmethod
     def paper_faithful(app: str) -> "PipelineConfig":
@@ -315,20 +321,51 @@ def stage_engine(cfg: PipelineConfig, store: ArtifactStore,
 
 def stage_search(cfg: PipelineConfig, store: ArtifactStore,
                  ctx: AppContext, engine: SurrogateEngine) -> dse.DSEResult:
-    """NSGA-III / island DSE over the engine (Sec III-C); disk-cached."""
+    """NSGA-III / island DSE over the engine (Sec III-C); disk-cached.
+
+    With ``cfg.dse_checkpoint_every > 0`` and a generational sampler
+    (nsga2/nsga3/islands), the running search persists a
+    `dse.SearchCheckpoint` into the store every N generations under a
+    ``search_ckpt`` key; a rerun of the identical config (after a crash
+    or kill) resumes from the last checkpoint and produces the
+    bit-identical front/history the uninterrupted run would have. The
+    checkpoint is evicted once the finished result is cached. The knob
+    is deliberately EXCLUDED from the search cache key: checkpointed and
+    plain runs yield the same result, so they share one cache slot."""
+    # checkpoint key: same spec as the result key, different stage prefix
+    ck_key = store.key("search_ckpt", _search_spec(cfg))
+    can_ckpt = (cfg.dse_checkpoint_every > 0
+                and cfg.sampler in ("nsga2", "nsga3", "islands"))
+
+    def ckpt_kwargs() -> Dict:
+        if not can_ckpt:
+            return {}
+        kw: Dict = {"checkpoint_every": cfg.dse_checkpoint_every,
+                    "checkpoint_sink": lambda ck: store.put(ck_key, ck)}
+        try:
+            kw["resume_from"] = store.get(ck_key)
+        except KeyError:
+            pass
+        return kw
+
     def build() -> dse.DSEResult:
         sizes = [len(ctx.entries[n.kind]) for n in ctx.app.unit_nodes]
         sampler = dse.SAMPLERS[cfg.sampler]
         if cfg.sampler in ("islands", "islands_ref"):
             # dse_pop is the *global* population; islands split it evenly
-            return sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
-                           n_islands=cfg.dse_islands,
-                           migrate_k=cfg.dse_migrate_k,
-                           pop=max(2, cfg.dse_pop // cfg.dse_islands))
-        if cfg.sampler.startswith("nsga"):
-            return sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
-                           pop=cfg.dse_pop)
-        return sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed)
+            res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
+                          n_islands=cfg.dse_islands,
+                          migrate_k=cfg.dse_migrate_k,
+                          pop=max(2, cfg.dse_pop // cfg.dse_islands),
+                          **ckpt_kwargs())
+        elif cfg.sampler.startswith("nsga"):
+            res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed,
+                          pop=cfg.dse_pop, **ckpt_kwargs())
+        else:
+            res = sampler(sizes, engine, cfg.dse_budget, seed=cfg.seed)
+        if can_ckpt:
+            store.evict(ck_key)      # finished: the result key takes over
+        return res
 
     key = store.key("search", _search_spec(cfg))
     return store.get_or_build("search", key, build)

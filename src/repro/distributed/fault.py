@@ -5,7 +5,19 @@ exactly where a 1000-node deployment would detect them:
 
   * FaultInjector      — deterministic step-indexed faults (host crash,
                          NaN corruption, straggler stall) for tests and the
-                         train-loop recovery drill;
+                         train-loop recovery drill. `wrap(evaluate)` turns
+                         the same schedule into an *evaluator* wrapper
+                         (`FaultyEvaluator`) keyed by call index, so the
+                         DSE/serving stack can be chaos-tested end to end
+                         (tests/test_fault_dse.py);
+  * RetryPolicy        — bounded-exponential-backoff retry for *transient*
+                         faults only (`TransientError` and subclasses);
+                         consumed by `SurrogateEngine` around backend
+                         calls and by `EvalService` around request
+                         dispatch. Deterministic non-transient errors
+                         (bad configs, shape mismatches) are never
+                         retried — retrying them would just burn the
+                         budget re-raising the same exception;
   * HealthMonitor      — per-step wall-time EWMA; a step slower than
                          `straggler_factor` x EWMA flags a straggler, which
                          at scale triggers hot-spare swap / rebalancing and
@@ -20,14 +32,21 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple,
+                    Type)
 
 
-class HostFailure(RuntimeError):
+class TransientError(RuntimeError):
+    """A fault that a bounded retry can heal: the faulting call is expected
+    to succeed if simply re-issued (crashed host replaced, stall passed).
+    `RetryPolicy` retries these and nothing else."""
+
+
+class HostFailure(TransientError):
     pass
 
 
-class StragglerStall(RuntimeError):
+class StragglerStall(TransientError):
     pass
 
 
@@ -52,6 +71,101 @@ class FaultInjector:
             self.fired.add(("nan", step))
             return True
         return False
+
+    def wrap(self, evaluate: Callable, nan_rows: int = 1
+             ) -> "FaultyEvaluator":
+        """Chaos wrapper for a batch evaluator: the crash/nan/stall
+        schedule fires by *call index* instead of train step."""
+        return FaultyEvaluator(evaluate, self, nan_rows=nan_rows)
+
+
+class FaultyEvaluator:
+    """A batch evaluator that injects its `FaultInjector`'s schedule.
+
+    The wrapped ``evaluate(configs) -> (n, n_obj)`` callable is invoked
+    normally; faults fire deterministically by this wrapper's own call
+    counter (0-based), each exactly once:
+
+      * ``crash_at``: raise `HostFailure` *before* the backend runs — a
+        transient fault the engine's `RetryPolicy` heals by re-issuing
+        the call (the retry lands on the next call index);
+      * ``nan_at``:   corrupt the first ``nan_rows`` returned rows to NaN
+        — caught by `SurrogateEngine`'s non-finite-row guard, which
+        re-evaluates the offending configs individually;
+      * ``stall_at``: sleep ``stall_seconds`` before evaluating — a
+        straggler; results are unaffected, only latency.
+
+    Because every fault fires once and the underlying evaluator is
+    deterministic, a retrying/guarded consumer recovers rows bit-identical
+    to the fault-free evaluator (the chaos-harness property).
+    """
+
+    def __init__(self, evaluate: Callable, injector: FaultInjector,
+                 nan_rows: int = 1):
+        import numpy as np
+        self._np = np
+        self.evaluate = evaluate
+        self.injector = injector
+        self.nan_rows = int(nan_rows)
+        self.calls = 0
+
+    def __call__(self, configs):
+        idx = self.calls
+        self.calls += 1
+        self.injector.check(idx)          # may raise HostFailure / stall
+        rows = self._np.asarray(self.evaluate(configs))
+        if self.injector.corrupt(idx) and len(rows):
+            rows = self._np.array(rows, self._np.float64, copy=True)
+            rows[:min(self.nan_rows, len(rows))] = self._np.nan
+        return rows
+
+
+@dataclass
+class RetryPolicy:
+    """Bounded exponential backoff for transient evaluator faults.
+
+    ``max_attempts`` counts every try including the first; an operation
+    is re-issued only while the raised exception is an instance of one of
+    ``retry_on`` (default: `TransientError` — injectable faults like
+    `HostFailure`/`StragglerStall`). Deterministic failures propagate on
+    the first raise. Delays grow ``base_delay_s * multiplier**attempt``,
+    clamped to ``max_delay_s``.
+    """
+    max_attempts: int = 3
+    base_delay_s: float = 0.01
+    max_delay_s: float = 0.5
+    multiplier: float = 2.0
+    retry_on: Tuple[Type[BaseException], ...] = (TransientError,)
+
+    def retryable(self, exc: BaseException, attempt: int) -> bool:
+        """True if the `attempt`-th try (0-based) may be re-issued."""
+        return (attempt + 1 < self.max_attempts
+                and isinstance(exc, self.retry_on))
+
+    def delay_s(self, attempt: int) -> float:
+        return min(self.base_delay_s * self.multiplier ** attempt,
+                   self.max_delay_s)
+
+    def sleep(self, attempt: int) -> None:
+        d = self.delay_s(attempt)
+        if d > 0:
+            time.sleep(d)
+
+    def call(self, fn: Callable, *args, on_retry: Optional[Callable] = None):
+        """Run ``fn(*args)`` under this policy; `on_retry` (if given) is
+        called with the exception before each re-issue — the engine uses
+        it to count retries into `EngineStats`."""
+        attempt = 0
+        while True:
+            try:
+                return fn(*args)
+            except BaseException as e:    # noqa: BLE001 — filtered below
+                if not self.retryable(e, attempt):
+                    raise
+                if on_retry is not None:
+                    on_retry(e)
+                self.sleep(attempt)
+                attempt += 1
 
 
 @dataclass

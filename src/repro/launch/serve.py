@@ -53,6 +53,12 @@ Config = Tuple[int, ...]
 # the evaluation/search service
 # ==========================================================================
 
+class ServiceOverloaded(RuntimeError):
+    """Raised by `EvalService.submit` when the in-flight request count is
+    at ``max_inflight`` — bounded admission control: the caller should
+    back off and resubmit instead of the service buffering unboundedly."""
+
+
 @dataclass
 class ServeRequest:
     """One client request.
@@ -69,6 +75,20 @@ class ServeRequest:
     sampler / budget / seed / dse_kwargs:
               dse payload; ``dse_kwargs`` passes sampler knobs through
               (``pop``, ``n_islands``, ``epochs``, ``migrate_k``, ...).
+    deadline_s:
+              per-request deadline, measured from submission. A dse
+              request checks it between generations and fails with
+              `TimeoutError` (its checkpoint, if any, survives for
+              resume); predict/label apply the remaining budget to their
+              queued-view wait. ``None`` = no deadline.
+    checkpoint_every:
+              dse only: checkpoint the search every N generations (epoch
+              boundaries for ``islands``) into the service's shared
+              `ArtifactStore` under a key derived from (tenant, sampler,
+              budget, seed, dse_kwargs). Resubmitting the identical
+              request — same service or a new one on the same store —
+              resumes from the last checkpoint bit-identically; the
+              checkpoint is evicted when the request completes.
     """
     kind: str
     tenant: str
@@ -77,6 +97,8 @@ class ServeRequest:
     budget: int = 256
     seed: int = 0
     dse_kwargs: Dict = field(default_factory=dict)
+    deadline_s: Optional[float] = None
+    checkpoint_every: int = 0
 
 
 @dataclass
@@ -134,6 +156,11 @@ class _InFlight:
         self.stream_q: "queue.Queue" = queue.Queue()
         self.done = threading.Event()
         self.response: Optional[ServeResponse] = None
+        self.submitted_s: float = 0.0
+        # the pool thread running this request, set at handler entry;
+        # `result` uses it to detect a handler that died without ever
+        # completing (instead of blocking forever on `done`)
+        self.worker: Optional[threading.Thread] = None
 
 
 class EvalService:
@@ -148,22 +175,42 @@ class EvalService:
                       ``False`` = serial per-request handling — each
                       handler calls the engine directly; used as the
                       benchmark baseline (benchmarks/serve_bench.py).
-        max_workers:  request handler threads (in-flight request cap).
+        max_workers:  request handler threads (concurrency, not a cap on
+                      admissions — see ``max_inflight``).
         drain_wait_s: how long an idle batcher blocks waiting for the
                       first submission of a wave. Purely a shutdown
                       latency / idle-spin knob — batching itself needs
                       no timing window, because whatever queues up while
                       the backend evaluates the previous wave is taken
                       wholesale by the next drain.
+        max_inflight: bounded admission control: `submit` raises
+                      `ServiceOverloaded` once this many requests are
+                      submitted-but-unfinished, instead of buffering an
+                      unbounded backlog in the pool queue. ``None`` =
+                      unbounded (the pre-hardening behavior).
+        retry:        `repro.distributed.fault.RetryPolicy` installed on
+                      every registered tenant engine/oracle that does not
+                      already carry one (transient backend faults are
+                      re-issued with bounded backoff, counted in the
+                      engine's ``stats.retries``), and used by the label
+                      path's per-config fallback. ``None`` = no retries.
+        result_timeout_s:
+                      default deadline for `result`/`results` calls made
+                      with ``timeout=None`` — a caller never blocks
+                      forever on a request whose handler died.
 
     Results are deterministic and bit-identical to the one-shot path no
     matter how many clients are in flight: engines memoize per config
     key, drains reuse the unchanged chunked ``__call__``, and DSE
     samplers derive all randomness from the request seed.
+    Fault-tolerance details (deadlines, retries, crash-resumable dse,
+    health snapshots): docs/fault_tolerance.md.
     """
 
     def __init__(self, store=None, *, coalesce: bool = True,
-                 max_workers: int = 8, drain_wait_s: float = 0.02):
+                 max_workers: int = 8, drain_wait_s: float = 0.02,
+                 max_inflight: Optional[int] = 256, retry=None,
+                 result_timeout_s: float = 600.0):
         from concurrent.futures import ThreadPoolExecutor
 
         from repro.core.artifacts import ArtifactStore
@@ -171,6 +218,10 @@ class EvalService:
         self.store = store if store is not None else ArtifactStore(None)
         self.coalesce = coalesce
         self.drain_wait_s = drain_wait_s
+        self.max_inflight = max_inflight
+        self.retry = retry
+        self.result_timeout_s = result_timeout_s
+        self._n_inflight = 0
         self._tenants: Dict[str, _Tenant] = {}
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="serve-worker")
@@ -192,11 +243,16 @@ class EvalService:
                  ) -> str:
         """Register a tenant from any evaluator (wrapped via
         `dse.as_engine`); returns the tenant name. Re-registering a name
-        replaces it."""
+        replaces it. The service's `RetryPolicy` (if any) is installed on
+        the engine/oracle unless they already carry their own."""
         from repro.core.dse import as_engine
 
         engine = as_engine(evaluate)
         ora = as_engine(oracle) if oracle is not None else None
+        if self.retry is not None:
+            for eng in (engine, ora):
+                if eng is not None and eng.retry is None:
+                    eng.retry = self.retry
         with self._lock:
             old = self._tenants.get(name)
             self._tenants[name] = _Tenant(name, engine, sizes, oracle=ora,
@@ -298,12 +354,18 @@ class EvalService:
             "EvalService closed" if self._stop.is_set()
             else "tenant replaced"))
 
-    def _eval_for(self, tenant: _Tenant, engine=None):
+    def _eval_for(self, tenant: _Tenant, engine=None,
+                  wait_s: Optional[float] = None):
         """The evaluator a request handler should use: a queued view
         participating in cross-request batching, or the engine directly
-        in serial (``coalesce=False``) mode."""
+        in serial (``coalesce=False``) mode. ``wait_s`` caps how long the
+        view waits on the drain side (a request deadline's remaining
+        budget); None keeps the view's default."""
         engine = engine if engine is not None else tenant.engine
-        return engine.queued_view() if self.coalesce else engine
+        if not self.coalesce:
+            return engine
+        return (engine.queued_view(timeout=wait_s) if wait_s is not None
+                else engine.queued_view())
 
     # -- request lifecycle -------------------------------------------------
 
@@ -311,7 +373,9 @@ class EvalService:
         """Enqueue a request; returns a request id immediately. Raises
         (rather than failing the response) on malformed submissions:
         unknown tenant, or predict/label configs out of range for the
-        tenant's space."""
+        tenant's space — and `ServiceOverloaded` when ``max_inflight``
+        requests are already submitted-but-unfinished (admission
+        control: reject loudly instead of buffering unboundedly)."""
         if self._closing.is_set():
             raise RuntimeError("EvalService is closed")
         with self._lock:
@@ -322,6 +386,14 @@ class EvalService:
                                f"(have {sorted(self._tenants)})") from None
         self._validate(req, tenant)
         with self._lock:
+            if self.max_inflight is not None and \
+                    self._n_inflight >= self.max_inflight:
+                raise ServiceOverloaded(
+                    f"EvalService at capacity: {self._n_inflight} "
+                    f"in-flight requests (max_inflight="
+                    f"{self.max_inflight}); back off and resubmit, or "
+                    f"raise max_inflight")
+            self._n_inflight += 1
             rid = next(self._rid)
             rec = _InFlight(rid, req)
             self._requests[rid] = rec
@@ -344,6 +416,7 @@ class EvalService:
                     f"{tenant.name!r} (space sizes {sizes})")
 
     def _run_request(self, rec: _InFlight) -> None:
+        rec.worker = threading.current_thread()
         req = rec.req
         t_start = time.perf_counter()
         try:
@@ -353,6 +426,9 @@ class EvalService:
         except BaseException as e:     # noqa: BLE001 — reported to client
             resp = ServeResponse(rec.rid, req.kind, req.tenant, False,
                                  error=f"{type(e).__name__}: {e}")
+        finally:
+            with self._lock:
+                self._n_inflight -= 1
         resp.submitted_s = rec.submitted_s
         resp.started_s = t_start
         resp.done_s = time.perf_counter()
@@ -360,27 +436,95 @@ class EvalService:
         rec.stream_q.put(_InFlight._DONE)
         rec.done.set()
 
+    def _deadline_at(self, rec: _InFlight) -> Optional[float]:
+        """Absolute perf_counter cutoff of a request's deadline_s (from
+        submission, so queue wait counts), or None."""
+        if rec.req.deadline_s is None:
+            return None
+        return rec.submitted_s + rec.req.deadline_s
+
+    @staticmethod
+    def _remaining(deadline_at: Optional[float], what: str) -> Optional[float]:
+        """Budget left until `deadline_at`; raises once it is spent."""
+        if deadline_at is None:
+            return None
+        left = deadline_at - time.perf_counter()
+        if left <= 0:
+            raise TimeoutError(what)
+        return left
+
     def _dispatch(self, req: ServeRequest, rec: _InFlight):
         with self._lock:
             tenant = self._tenants[req.tenant]
+        deadline_at = self._deadline_at(rec)
+        over = (f"request exceeded deadline_s={req.deadline_s} "
+                f"({req.kind} on tenant {req.tenant!r})")
         if req.kind == "predict":
-            return np.asarray(self._eval_for(tenant)(list(req.configs)))
+            wait = self._remaining(deadline_at, over)
+            return np.asarray(
+                self._eval_for(tenant, wait_s=wait)(list(req.configs)))
         if req.kind == "label":
             oracle = tenant.oracle()
             if self.coalesce:
                 self._ensure_batcher(oracle)
-            return np.asarray(
-                self._eval_for(tenant, oracle)(list(req.configs)))
+            wait = self._remaining(deadline_at, over)
+            ev = self._eval_for(tenant, oracle, wait_s=wait)
+            cfgs = list(req.configs)
+            try:
+                return np.asarray(ev(cfgs))
+            except BaseException:      # noqa: BLE001 — per-config fallback
+                if self.retry is None:
+                    raise
+                # Per-config retry: a transient oracle fault poisons only
+                # the batch it struck; labeling each config individually
+                # under the retry policy recovers every healthy row and
+                # names the persistently-failing config instead of
+                # failing the whole labeling job anonymously.
+                rows = []
+                for c in cfgs:
+                    try:
+                        rows.append(np.asarray(self.retry.call(ev, [c]))[0])
+                    except BaseException as e:   # noqa: BLE001 — named
+                        raise RuntimeError(
+                            f"label request failed persistently on config "
+                            f"{tuple(int(v) for v in c)}: "
+                            f"{type(e).__name__}: {e}") from e
+                return np.stack(rows, 0)
         if req.kind == "dse":
             from repro.core import dse as dse_lib
 
+            kwargs = dict(req.dse_kwargs)
+            ck_key = None
+            if req.checkpoint_every:
+                # Crash-resumable dse: checkpoints live in the service's
+                # shared store under a key derived from the request
+                # identity, so resubmitting the identical request — from
+                # this service or a NEW one on the same store after a
+                # crash — resumes from the last epoch barrier instead of
+                # restarting, bit-identically (tests/test_fault_dse.py).
+                ck_key = self.store.key("search_ckpt", {
+                    "tenant": req.tenant, "sampler": req.sampler,
+                    "budget": int(req.budget), "seed": int(req.seed),
+                    "kwargs": kwargs})
+                try:
+                    kwargs["resume_from"] = self.store.get(ck_key)
+                except KeyError:
+                    pass
+                kwargs["checkpoint_every"] = req.checkpoint_every
+                kwargs["checkpoint_sink"] = \
+                    lambda ck: self.store.put(ck_key, ck)
             gen = dse_lib.iter_sampler(
                 req.sampler, tenant.sizes, self._eval_for(tenant),
-                req.budget, seed=req.seed, **req.dse_kwargs)
+                req.budget, seed=req.seed, **kwargs)
             while True:
+                self._remaining(deadline_at, over + (
+                    "; the search checkpoint survives — resubmit the "
+                    "identical request to resume" if ck_key else ""))
                 try:
                     rec.stream_q.put(next(gen))
                 except StopIteration as e:
+                    if ck_key is not None:
+                        self.store.evict(ck_key)
                     return e.value
         raise ValueError(f"unknown request kind {req.kind!r}")
 
@@ -418,14 +562,38 @@ class EvalService:
     def result(self, rid: int, timeout: Optional[float] = None
                ) -> ServeResponse:
         """Block until the request finishes; returns its response. The
-        request stays retrievable until `forget(rid)`."""
+        request stays retrievable until `forget(rid)`.
+
+        Never hangs forever: ``timeout=None`` applies the service default
+        ``result_timeout_s`` instead of waiting unboundedly, and a
+        handler thread that died without completing (a killed worker, an
+        interpreter-level fault) raises immediately with the dead
+        handler's name rather than blocking out the full deadline."""
         rec = self._rec(rid)
-        if not rec.done.wait(timeout):
-            raise TimeoutError(f"request {rid} still running")
-        return rec.response
+        budget = self.result_timeout_s if timeout is None else timeout
+        t_end = time.monotonic() + budget
+        while True:
+            left = t_end - time.monotonic()
+            if rec.done.wait(timeout=max(0.0, min(0.05, left))):
+                return rec.response
+            worker = rec.worker
+            if worker is not None and not worker.is_alive():
+                raise RuntimeError(
+                    f"request {rid} ({rec.req.kind} on tenant "
+                    f"{rec.req.tenant!r}) can never complete: handler "
+                    f"thread {worker.name!r} died without producing a "
+                    f"response")
+            if left <= 0:
+                raise TimeoutError(
+                    f"request {rid} still running after {budget}s" + (
+                        "" if timeout is not None else
+                        " (service default result_timeout_s — pass an "
+                        "explicit timeout to wait longer)"))
 
     def results(self, rids: Sequence[int],
                 timeout: Optional[float] = None) -> List[ServeResponse]:
+        """`result` for many ids; the default-deadline / dead-handler
+        guarantees apply per id."""
         return [self.result(r, timeout=timeout) for r in rids]
 
     def forget(self, rid: int) -> None:
@@ -448,6 +616,38 @@ class EvalService:
             tenants = dict(self._tenants)
         return {name: t.engine.stats.as_dict()
                 for name, t in tenants.items()}
+
+    def health(self) -> Dict:
+        """Liveness/pressure snapshot for monitoring and admission logic.
+
+        ``ok`` is True iff the service accepts work and every batcher
+        thread is alive; ``queue_depth`` is the per-tenant count of
+        submissions waiting for a drain wave; ``retries``/``quarantined``
+        surface the engines' fault counters so silent fault-healing is
+        visible from outside."""
+        with self._lock:
+            tenants = dict(self._tenants)
+            batchers = [th for th, _ in self._batchers.values()]
+            inflight = self._n_inflight
+            tracked = len(self._requests)
+        batchers_alive = all(th.is_alive() for th in batchers)
+        closing = self._closing.is_set()
+        return {
+            "ok": not closing and batchers_alive,
+            "closing": closing,
+            "tenants": sorted(tenants),
+            "inflight": inflight,
+            "max_inflight": self.max_inflight,
+            "requests_tracked": tracked,
+            "batchers": {"count": len(batchers),
+                         "alive": sum(th.is_alive() for th in batchers)},
+            "queue_depth": {name: t.engine.pending()
+                            for name, t in tenants.items()},
+            "retries": {name: t.engine.stats.retries
+                        for name, t in tenants.items()},
+            "quarantined": {name: t.engine.stats.quarantined
+                            for name, t in tenants.items()},
+        }
 
     def close(self) -> None:
         """Finish in-flight work, then stop the batchers and the pool.

@@ -1,0 +1,483 @@
+"""Chaos harness for the fault-tolerance layer (search + storage + serving).
+
+The contract under test, end to end: **faults that the stack is designed
+to absorb leave no trace in the results**. A DSE run whose evaluator
+crashes transiently, returns NaN rows, stalls, or whose driving process
+is killed and resumed from a `SearchCheckpoint`, must produce the
+bit-identical Pareto front and hypervolume trajectory of the
+uninterrupted fault-free run — not "approximately the same front", the
+same floats (`np.array_equal`). The pieces that make this possible:
+
+  * `FaultInjector`/`FaultyEvaluator` fire each scheduled fault exactly
+    once by call index, so a retrying consumer's re-issue lands on a
+    clean call and recovers the deterministic evaluator's true rows;
+  * `SurrogateEngine` heals transient crashes via its `RetryPolicy` and
+    non-finite rows via the nan guard (per-config re-evaluation,
+    quarantine to ``+inf`` only when persistently poisoned);
+  * `nsga_steps`/`islands_steps` checkpoints capture the full generator
+    state (populations, archive, RNG stream) at generation/epoch
+    barriers, so resume replays the exact future the killed run had;
+  * `ArtifactStore` quarantines torn pickles as misses; `EvalService`
+    bounds admission, enforces deadlines, detects dead handlers, and
+    resumes checkpointed dse requests across service instances.
+
+Property tests run on the real `hypothesis` when installed, else on the
+deterministic fallback shim in conftest.py (same API subset).
+"""
+import pickle
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dse as dse_lib
+from repro.core.artifacts import ArtifactStore
+from repro.core.dse import drain_steps, nsga_steps
+from repro.core.engine import SurrogateEngine
+from repro.core.islands import islands_steps
+from repro.distributed.fault import (FaultInjector, HealthMonitor,
+                                     HostFailure, RetryPolicy,
+                                     TransientError, elastic_plan)
+from repro.launch.serve import (EvalService, ServeRequest,
+                                ServiceOverloaded)
+
+SIZES = (5, 4, 3)
+
+
+def _toy_eval(configs):
+    """Deterministic pure-NumPy 4-objective toy evaluator (row-independent,
+    so chunking/fusing/re-evaluating cannot perturb rows)."""
+    X = np.asarray(configs, np.float64)
+    return np.stack([X.sum(1) + 1.0, ((X - 1.0) ** 2).sum(1) + 1.0,
+                     (X[:, 0] - X[:, -1]) ** 2 + 1.0,
+                     np.cos(X).sum(1) + 2.0], 1)
+
+
+def _all_configs():
+    out = []
+    for a in range(SIZES[0]):
+        for b in range(SIZES[1]):
+            for c in range(SIZES[2]):
+                out.append((a, b, c))
+    return out
+
+
+def _chaos_engine(schedule_seed: int, n_calls: int = 40) -> SurrogateEngine:
+    """An engine over the toy evaluator wrapped in a pseudo-random fault
+    schedule drawn from `schedule_seed`: 3 transient crashes + 3 NaN
+    corruptions somewhere in the first `n_calls` call indices. Retry
+    head-room (4 attempts / 3 nan retries) strictly exceeds the fault
+    counts, so every schedule is healable by construction."""
+    rng = np.random.default_rng(schedule_seed)
+    inj = FaultInjector(
+        crash_at=tuple(int(i) for i in rng.integers(0, n_calls, 3)),
+        nan_at=tuple(int(i) for i in rng.integers(0, n_calls, 3)))
+    return SurrogateEngine(
+        inj.wrap(_toy_eval, nan_rows=2), backend="chaos",
+        retry=RetryPolicy(max_attempts=4, base_delay_s=0.0),
+        nan_retries=3)
+
+
+# --------------------------------------------------------------------------
+# fault primitives: injector / retry / health / elastic plan
+# --------------------------------------------------------------------------
+
+def test_fault_injector_fires_each_fault_exactly_once():
+    inj = FaultInjector(crash_at=(2,), nan_at=(1,), stall_at=(3,),
+                        stall_seconds=0.0)
+    inj.check(0)                                   # no scheduled fault
+    with pytest.raises(HostFailure):
+        inj.check(2)
+    inj.check(2)                                   # second hit: healed
+    assert inj.corrupt(1) and not inj.corrupt(1)   # nan fires once
+    inj.check(3)                                   # stall (0s) fires...
+    assert ("stall", 3) in inj.fired               # ...and is recorded
+    assert not inj.corrupt(0)                      # unscheduled index
+
+
+def test_faulty_evaluator_faults_by_call_index():
+    inj = FaultInjector(crash_at=(0,), nan_at=(1,))
+    ev = inj.wrap(_toy_eval, nan_rows=2)
+    cfgs = [(0, 0, 0), (1, 1, 1), (2, 2, 2)]
+    with pytest.raises(HostFailure):
+        ev(cfgs)                                   # call 0 crashes
+    rows = ev(cfgs)                                # call 1: nan-corrupted
+    assert np.isnan(rows[:2]).all() and np.isfinite(rows[2]).all()
+    assert np.array_equal(ev(cfgs), _toy_eval(cfgs))   # call 2 clean
+    assert ev.calls == 3
+
+
+def test_retry_policy_heals_transient_and_propagates_deterministic():
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.0)
+    state = {"n": 0, "retries": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] < 3:
+            raise TransientError("transient")
+        return "ok"
+
+    assert pol.call(flaky,
+                    on_retry=lambda e: state.update(
+                        retries=state["retries"] + 1)) == "ok"
+    assert state["retries"] == 2
+
+    def always():
+        raise TransientError("permanent-ish")
+    with pytest.raises(TransientError):
+        pol.call(always)                  # budget exhausted -> propagates
+
+    def deterministic():
+        state["n"] += 1
+        raise ValueError("bad shape")
+    state["n"] = 0
+    with pytest.raises(ValueError):
+        pol.call(deterministic)
+    assert state["n"] == 1                # never re-issued
+
+    clamped = RetryPolicy(base_delay_s=0.1, multiplier=10.0,
+                          max_delay_s=0.5)
+    assert clamped.delay_s(0) == pytest.approx(0.1)
+    assert clamped.delay_s(3) == pytest.approx(0.5)   # clamped
+
+
+def test_health_monitor_flags_stragglers_without_poisoning_ewma():
+    mon = HealthMonitor(straggler_factor=3.0)
+    assert not any(mon.record(i, 1.0) for i in range(4))
+    ewma_before = mon.ewma
+    assert mon.record(4, 10.0)            # 10x the baseline: straggler
+    assert mon.stragglers == [4]
+    assert mon.ewma == ewma_before        # straggler kept out of the EWMA
+    assert not mon.record(5, 1.0)         # baseline intact
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.sampled_from([64, 128, 256, 512]))
+def test_elastic_plan_shapes(n_devices, global_batch):
+    plan = elastic_plan(n_devices, global_batch)
+    assert set(plan) == {"data", "model", "grad_accum", "per_shard_batch"}
+    assert plan["data"] * plan["model"] == n_devices
+    assert 1 <= plan["model"] <= 16
+    assert plan["grad_accum"] >= 1
+    assert plan["per_shard_batch"] == global_batch // plan["data"]
+
+
+# --------------------------------------------------------------------------
+# engine healing: retry + nan guard recover bit-identical rows
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=3),
+       st.integers(min_value=0, max_value=3))
+def test_engine_heals_faults_bit_identically(k_crash, k_nan):
+    cfgs = _all_configs()
+    clean = SurrogateEngine(_toy_eval)(cfgs)
+    inj = FaultInjector(crash_at=(k_crash,), nan_at=(k_nan,))
+    eng = SurrogateEngine(inj.wrap(_toy_eval, nan_rows=3),
+                          chunk_size=16,   # 60 configs -> 4 backend calls
+                          retry=RetryPolicy(max_attempts=3,
+                                            base_delay_s=0.0))
+    assert np.array_equal(eng(cfgs), clean)
+    assert eng.stats.retries == 1         # the one crash was retried
+    assert eng.stats.quarantined == 0     # every nan row healed
+    assert not eng.quarantined
+
+
+def test_engine_quarantines_persistently_poisoned_config():
+    poison = (1, 2, 0)
+
+    def poisoned(configs):
+        rows = np.array(_toy_eval(configs))
+        for i, c in enumerate(configs):
+            if tuple(c) == poison:
+                rows[i] = np.nan          # NaN on EVERY evaluation
+        return rows
+
+    cfgs = _all_configs()
+    eng = SurrogateEngine(poisoned, nan_retries=2)
+    rows = eng(cfgs)
+    clean = _toy_eval(cfgs)
+    for i, c in enumerate(cfgs):
+        if c == poison:                   # dominated sentinel, never front
+            assert np.all(rows[i] == np.inf)
+        else:
+            assert np.array_equal(rows[i], clean[i])
+    assert eng.quarantined == {poison}
+    assert eng.stats.quarantined == 1
+
+
+# --------------------------------------------------------------------------
+# the tentpole property: chaos + kill/resume == fault-free, bit for bit
+# --------------------------------------------------------------------------
+
+def _assert_same_result(res, base):
+    assert res.pareto_configs == base.pareto_configs
+    assert np.array_equal(res.pareto_objs, base.pareto_objs)
+    assert res.history == base.history    # full dicts, exact floats
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=9999),
+       st.integers(min_value=1, max_value=3),
+       st.integers(min_value=0, max_value=6))
+def test_nsga_chaos_kill_resume_bit_identical(schedule_seed, every,
+                                              kill_after):
+    seed = schedule_seed % 5
+    base = drain_steps(nsga_steps(SIZES, SurrogateEngine(_toy_eval), 80,
+                                  seed=seed, pop=10))
+    # chaos run: faulted evaluator, checkpointing, killed mid-stream
+    saved = {}
+
+    def sink(ck):
+        saved["ck"] = pickle.loads(pickle.dumps(ck))   # survives a crash
+
+    gen = nsga_steps(SIZES, _chaos_engine(schedule_seed), 80, seed=seed,
+                     pop=10, checkpoint_every=every, checkpoint_sink=sink)
+    for i, _ in enumerate(gen):
+        if i >= kill_after:
+            break                         # the "crash": abandon mid-run
+    # resume on a FRESH engine (empty memo cache, a different fault
+    # schedule) — exactly what a restarted process looks like
+    res = drain_steps(nsga_steps(
+        SIZES, _chaos_engine(schedule_seed + 1), 80, seed=seed, pop=10,
+        resume_from=saved.get("ck")))
+    _assert_same_result(res, base)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=9999),
+       st.sampled_from([1, 2]),
+       st.integers(min_value=0, max_value=2))
+def test_islands_chaos_kill_resume_bit_identical(schedule_seed, every,
+                                                 kill_after):
+    seed = schedule_seed % 5
+    kw = dict(n_islands=2, pop=4, epochs=3, migrate_k=2)
+    base = drain_steps(islands_steps(SIZES, SurrogateEngine(_toy_eval), 48,
+                                     seed=seed, **kw))
+    saved = {}
+
+    def sink(ck):
+        saved["ck"] = pickle.loads(pickle.dumps(ck))
+
+    gen = islands_steps(SIZES, _chaos_engine(schedule_seed), 48, seed=seed,
+                        checkpoint_every=every, checkpoint_sink=sink, **kw)
+    for i, _ in enumerate(gen):
+        if i >= kill_after:
+            break
+    res = drain_steps(islands_steps(
+        SIZES, _chaos_engine(schedule_seed + 1), 48, seed=seed,
+        resume_from=saved.get("ck"), **kw))
+    _assert_same_result(res, base)
+
+
+def test_resume_under_different_run_params_raises():
+    saved = {}
+    drain_steps(nsga_steps(SIZES, _toy_eval, 40, seed=0, pop=10,
+                           checkpoint_every=1,
+                           checkpoint_sink=lambda ck: saved.update(ck=ck)))
+    with pytest.raises(ValueError, match="does not match"):
+        drain_steps(nsga_steps(SIZES, _toy_eval, 40, seed=0, pop=8,
+                               resume_from=saved["ck"]))
+    with pytest.raises(ValueError, match="SearchCheckpoint"):
+        drain_steps(nsga_steps(SIZES, _toy_eval, 40, seed=0, pop=10,
+                               resume_from={"not": "a checkpoint"}))
+
+
+def test_one_shot_samplers_reject_checkpoint_kwargs():
+    for sampler in ("random", "tpe"):
+        with pytest.raises(ValueError, match="cannot checkpoint"):
+            drain_steps(dse_lib.iter_sampler(sampler, SIZES, _toy_eval, 30,
+                                             seed=0, checkpoint_every=2))
+
+
+# --------------------------------------------------------------------------
+# storage: torn pickles are quarantined misses, never wrong artifacts
+# --------------------------------------------------------------------------
+
+def test_store_quarantines_corrupt_pickle_and_rebuilds(tmp_path):
+    root = str(tmp_path)
+    key = ArtifactStore.key("dataset", {"x": 1})
+    ArtifactStore(root).put(key, {"v": 42})
+
+    (tmp_path / f"{key}.pkl").write_bytes(b"\x80\x04 torn mid-write")
+    s2 = ArtifactStore(root)              # fresh process: no memory tier
+    with pytest.raises(KeyError):
+        s2.get(key)
+    assert (tmp_path / f"{key}.pkl.corrupt").exists()
+    assert not (tmp_path / f"{key}.pkl").exists()
+    assert s2.stats.as_dict()["quarantines"] == [key]
+
+    # get_or_build sees a plain miss and rebuilds the slot
+    built = s2.get_or_build("dataset", key, lambda: {"v": 43})
+    assert built == {"v": 43} and s2.get(key) == {"v": 43}
+    assert s2.stats.misses == {"dataset": 1}
+
+    # a second corruption parks beside the first with a numeric suffix
+    (tmp_path / f"{key}.pkl").write_bytes(b"also garbage")
+    s3 = ArtifactStore(root)
+    with pytest.raises(KeyError):
+        s3.get(key)
+    assert (tmp_path / f"{key}.pkl.corrupt1").exists()
+
+
+# --------------------------------------------------------------------------
+# serving: admission control, deadlines, dead handlers, crash-resume
+# --------------------------------------------------------------------------
+
+class _Gate:
+    """Evaluator that blocks until released (a wedged backend)."""
+
+    def __init__(self):
+        self.release = threading.Event()
+
+    def __call__(self, configs):
+        self.release.wait(10.0)
+        return _toy_eval(configs)
+
+
+def test_submit_rejects_at_capacity_then_recovers():
+    gate = _Gate()
+    with EvalService(coalesce=False, max_inflight=1) as svc:
+        svc.register("t", gate, SIZES)
+        rid = svc.submit(ServeRequest("predict", "t", configs=[(0, 0, 0)]))
+        with pytest.raises(ServiceOverloaded, match="capacity"):
+            svc.submit(ServeRequest("predict", "t", configs=[(1, 0, 0)]))
+        gate.release.set()
+        assert svc.result(rid, timeout=10.0).ok
+        rid2 = svc.submit(ServeRequest("predict", "t",
+                                       configs=[(1, 0, 0)]))
+        assert svc.result(rid2, timeout=10.0).ok   # capacity freed
+
+
+def test_result_default_deadline_and_dead_handler_detection():
+    gate = _Gate()
+    with EvalService(coalesce=False, result_timeout_s=0.2) as svc:
+        svc.register("t", gate, SIZES)
+        rid = svc.submit(ServeRequest("predict", "t", configs=[(0, 0, 0)]))
+        # timeout=None no longer hangs: the service default applies
+        with pytest.raises(TimeoutError, match="result_timeout_s"):
+            svc.result(rid)
+        # a handler thread that died without responding is named, not
+        # waited out (forged here: the real worker is still blocked)
+        dead = threading.Thread(target=lambda: None, name="dead-worker")
+        dead.start()
+        dead.join()
+        svc._rec(rid).worker = dead
+        with pytest.raises(RuntimeError, match="can never complete"):
+            svc.result(rid, timeout=5.0)
+        gate.release.set()
+
+
+def test_service_health_snapshot():
+    with EvalService(coalesce=False) as svc:
+        svc.register("t", _toy_eval, SIZES)
+        h = svc.health()
+        assert h["ok"] and not h["closing"]
+        assert "t" in h["tenants"]
+        assert h["inflight"] == 0 and h["max_inflight"] == 256
+        assert h["retries"] == {"t": 0} and h["quarantined"] == {"t": 0}
+
+
+class _Sleepy:
+    def __init__(self, dt):
+        self.dt = dt
+
+    def __call__(self, configs):
+        time.sleep(self.dt)
+        return _toy_eval(configs)
+
+
+def test_dse_deadline_leaves_resumable_checkpoint():
+    base = drain_steps(nsga_steps(SIZES, _toy_eval, 60, seed=5, pop=10))
+    with EvalService(coalesce=False) as svc:
+        svc.register("t", _Sleepy(0.03), SIZES)
+        r = svc.result(svc.submit(ServeRequest(
+            "dse", "t", budget=60, seed=5, dse_kwargs={"pop": 10},
+            deadline_s=0.06, checkpoint_every=1)), timeout=30.0)
+        assert not r.ok
+        assert "deadline_s" in r.error and "resubmit" in r.error
+        # the identical request (minus the deadline) resumes and finishes
+        r2 = svc.result(svc.submit(ServeRequest(
+            "dse", "t", budget=60, seed=5, dse_kwargs={"pop": 10},
+            checkpoint_every=1)), timeout=60.0)
+        assert r2.ok
+        _assert_same_result(r2.value, base)
+
+
+def test_dse_crash_resume_across_service_instances():
+    """A dse request whose evaluator dies permanently fails on service A;
+    resubmitting the identical request to a NEW service on the same store
+    resumes from A's last checkpoint and matches the fault-free run."""
+    store = ArtifactStore(None)
+    base = drain_steps(nsga_steps(SIZES, _toy_eval, 80, seed=2, pop=10))
+    req = dict(kind="dse", tenant="t", budget=80, seed=2,
+               dse_kwargs={"pop": 10}, checkpoint_every=1)
+    ck_key = store.key("search_ckpt", {
+        "tenant": "t", "sampler": "nsga3", "budget": 80, "seed": 2,
+        "kwargs": {"pop": 10}})
+
+    calls = {"n": 0}
+
+    def dying(configs):
+        calls["n"] += 1
+        if calls["n"] >= 5:               # permanent: fails every call on
+            raise ValueError("host lost")     # (drain isolation would
+        return _toy_eval(configs)             # heal a one-shot raise)
+
+    with EvalService(store=store, coalesce=False) as a:
+        a.register("t", dying, SIZES)
+        r = a.result(a.submit(ServeRequest(**req)), timeout=30.0)
+        assert not r.ok and "host lost" in r.error
+    assert store.has(ck_key)              # progress survived the crash
+
+    with EvalService(store=store, coalesce=False) as b:
+        b.register("t", _toy_eval, SIZES)
+        r2 = b.result(b.submit(ServeRequest(**req)), timeout=60.0)
+        assert r2.ok
+        _assert_same_result(r2.value, base)
+    assert not store.has(ck_key)          # evicted on completion
+
+
+# --------------------------------------------------------------------------
+# pipeline wiring: dse_checkpoint_every resumes stage_search after a kill
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_pipeline_stage_search_crash_resume(tmp_path):
+    from repro.core import pipeline as P
+
+    cfg = P.PipelineConfig(app="sobel", surrogate="oracle", dse_budget=120,
+                           dse_pop=16, seed=3, dse_checkpoint_every=1)
+    plain = P.PipelineConfig(app="sobel", surrogate="oracle",
+                             dse_budget=120, dse_pop=16, seed=3)
+    # the knob shares the plain run's search cache slot (same results)
+    assert (ArtifactStore.key("search", P._search_spec(cfg))
+            == ArtifactStore.key("search", P._search_spec(plain)))
+
+    base = P.run_staged(plain, store=ArtifactStore(None))
+
+    store = ArtifactStore(str(tmp_path))
+    ctx = P.stage_prune(cfg, store)
+    ds = P.stage_dataset(cfg, store, ctx)
+    engine = P.stage_engine(cfg, store, ctx, ds,
+                            P.stage_train(cfg, store, ds))
+    sizes = [len(ctx.entries[n.kind]) for n in ctx.app.unit_nodes]
+    ck_key = store.key("search_ckpt", P._search_spec(cfg))
+    # same search, checkpointing into the store, killed after 3 gens
+    gen = nsga_steps(sizes, engine, cfg.dse_budget, seed=cfg.seed,
+                     pop=cfg.dse_pop, checkpoint_every=1,
+                     checkpoint_sink=lambda ck: store.put(ck_key, ck))
+    for i, _ in enumerate(gen):
+        if i >= 3:
+            break
+    assert store.has(ck_key)
+
+    res = P.run_staged(cfg, store=store)  # resumes from the checkpoint
+    assert res.pareto_configs == base.pareto_configs
+    assert np.array_equal(res.pareto_objs, base.pareto_objs)
+    assert res.metrics["dse_history"] == base.metrics["dse_history"]
+    assert not store.has(ck_key)          # evicted once the result cached
