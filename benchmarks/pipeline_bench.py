@@ -23,8 +23,14 @@ Measures
 
 Acceptance gates: the resumed run must actually HIT the dataset+train
 cache (asserted on store counters, not wall clock) and be >= 5x faster
-than the cold run (>= 2x in --smoke, where the cold run is small).
-Writes BENCH_pipeline.json.
+than the cold run (>= 2x in --smoke, where the cold run is small). In
+full mode the unified surrogate's union test-split R² is gated too:
+ssim >= 0.95 (the config-dynamic timing features of the schema-v2
+refactor are what lifted it from 0.803) with the PPA targets held at
+>= 0.98 — a feature change that trades PPA accuracy for SSIM fails
+here. The cold run's Pareto points are oracle-checked
+(`validate_pareto`) and the mean relative error is recorded in the
+report. Writes BENCH_pipeline.json.
 """
 from __future__ import annotations
 
@@ -63,6 +69,11 @@ def main() -> None:
         r_cold = P.run(cfg)
         cold_s = time.perf_counter() - t0
         print(f"pipeline_bench,cold,time_s={cold_s:.2f}")
+
+        # oracle-check the selected Pareto designs (surrogate gap)
+        val = P.validate_pareto(r_cold)
+        print(f"pipeline_bench,validate_pareto,"
+              f"mean_rel_err={val['mean_rel_err']:.4f}")
 
         # fresh store over the same root = a new process resuming
         t0 = time.perf_counter()
@@ -125,6 +136,10 @@ def main() -> None:
             "unified_union_r2": {
                 t: round(u.metrics[t]["r2"], 3)
                 for t in ("area", "power", "latency", "ssim")},
+            "validate_pareto": {
+                "mean_rel_err": round(val["mean_rel_err"], 4),
+                "per_obj": {k: round(v, 4)
+                            for k, v in val.get("per_obj", {}).items()}},
             "resume_hits": hits,
         }
         Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
@@ -134,6 +149,20 @@ def main() -> None:
             raise SystemExit(
                 f"pipeline_bench: cached-resume speedup {speedup:.1f}x "
                 f"below the {floor}x acceptance floor")
+        # surrogate-quality gates (full mode only: the smoke config is
+        # deliberately too tiny to train a predictive model)
+        if not args.smoke:
+            r2 = report["unified_union_r2"]
+            if r2["ssim"] < 0.95:
+                raise SystemExit(
+                    f"pipeline_bench: unified union SSIM R2 "
+                    f"{r2['ssim']:.3f} below the 0.95 gate")
+            low_ppa = {t: r2[t] for t in ("area", "power", "latency")
+                       if r2[t] < 0.98}
+            if low_ppa:
+                raise SystemExit(
+                    f"pipeline_bench: unified union PPA R2 below the "
+                    f"0.98 gate: {low_ppa}")
     finally:
         shutil.rmtree(root, ignore_errors=True)
 

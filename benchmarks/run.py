@@ -5,11 +5,13 @@ benches. Prints `name,value,derived` CSV rows.
 
 Sections: tables (II,III,VIII), models (V,VI,VII,fig5), dse (IV,fig4,fig6),
 kernels, lm, roofline, bridge, engine (batched-vs-naive surrogate
-throughput, see benchmarks/engine_bench.py), dataset (batched-vs-loop
+throughput + the dynamic-featurization overhead gate for the schema-v2
+timing block, see benchmarks/engine_bench.py), dataset (batched-vs-loop
 labeling throughput, see benchmarks/dataset_bench.py), train (vmapped
 ensemble vs sequential loop fits, see benchmarks/train_bench.py),
 pipeline (staged cold vs cached-resume + unified-vs-per-app surrogate
-fits, see benchmarks/pipeline_bench.py), serve (cross-request batching
+fits, with full-mode unified-SSIM-R² / PPA-R² quality gates, see
+benchmarks/pipeline_bench.py), serve (cross-request batching
 vs serial request handling in the evaluation daemon, see
 benchmarks/serve_bench.py), fault (crash-safe search: checkpointed vs
 plain DSE overhead + bit-identity gates, see

@@ -382,6 +382,55 @@ def accuracy_ssim(app: AccelDef, choice: Dict[str, lib.LibEntry],
 
 
 # --------------------------------------------------------------------------
+# functional probe (schema-v2 dynamic features)
+# --------------------------------------------------------------------------
+#
+# Static unit error profiles (mae/wce over uniform operands) miss how an
+# app actually exercises its units: gaussian/dct8 multipliers see FIXED
+# coefficient operands, and the composition (shifts, clips, adder trees)
+# reshapes the error before it reaches the output. The probe runs the
+# REAL config-batched functional model on one tiny image per scale and
+# reports the distortion 1 - SSIM — two graph-level features that carry
+# the composed error structure no per-unit table can. Two scales on
+# purpose: the 8x8 probe resolves block-local distortion (one DCT block,
+# strong signal for smoothing kernels), the 16x16 probe the longer-range
+# structure. Tiny images keep it hot-path cheap: 64-256 pixels vs the
+# 4x64x64 labeling set, through the SAME cached `_batch_label_fn`.
+
+PROBE_SIZES = (8, 16)
+PROBE_SEED = 77
+PROBE_FIELDS = tuple(f"probe_err{s}" for s in PROBE_SIZES)
+
+
+@functools.lru_cache(maxsize=None)
+def probe_inputs(app_name: str, size: int) -> Tuple[jax.Array, jax.Array]:
+    """(images, exact_out) for the functional probe at one scale —
+    deterministic (PROBE_SEED), computed once per (app, size)."""
+    from repro.data import images as images_lib
+    app = APPS[app_name]
+    imgs = images_lib.image_set(1, size, seed=PROBE_SEED)
+    if app_name == "kmeans":
+        inp = jnp.asarray(imgs.astype(np.int32))
+    else:
+        inp = jnp.asarray(images_lib.gray(imgs))
+    exact_out = app.run(make_impls(app, exact_choice(app)), inp)
+    return inp, exact_out
+
+
+def probe_scalar(app: AccelDef, choice: Dict[str, lib.LibEntry]
+                 ) -> Dict[str, float]:
+    """Scalar-reference probe distortions {probe_err8, probe_err16} for
+    one configuration (the loop labeling backend / parity tests; the
+    batched path is `batch_oracle.probe_batch`)."""
+    out = {}
+    for size in PROBE_SIZES:
+        inp, exact_out = probe_inputs(app.name, size)
+        out[f"probe_err{size}"] = 1.0 - accuracy_ssim(app, choice, inp,
+                                                      exact_out)
+    return out
+
+
+# --------------------------------------------------------------------------
 # config-batched functional model (batched ground-truth labeling)
 # --------------------------------------------------------------------------
 #

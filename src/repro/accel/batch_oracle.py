@@ -186,6 +186,108 @@ def synthesize_batch(app: apps_lib.AccelDef, entries: Dict[str, Sequence],
             "node_ids": ca.node_ids}
 
 
+@functools.lru_cache(maxsize=None)
+def _unit_err_tables(app_name: str, entries_items):
+    """Per-unit-node float64 (mae, wce) columns for error propagation."""
+    app = apps_lib.APPS[app_name]
+    entries = dict(entries_items)
+    mae, wce = [], []
+    for node in app.unit_nodes:
+        ent = entries[node.kind]
+        mae.append(np.array([e.mae for e in ent], np.float64))
+        wce.append(np.array([e.wce for e in ent], np.float64))
+    return tuple(mae), tuple(wce)
+
+
+def timing_batch(app: apps_lib.AccelDef, entries: Dict[str, Sequence],
+                 configs) -> Dict[str, np.ndarray]:
+    """Timing-only slice of `synthesize_batch` for the DSE hot path.
+
+    Vectorized `synth.static_timing` over a (B, n_units) config block:
+    the arrival/required-time sweeps and the DAG error propagation, but
+    NONE of the per-config sha256 jitter hashing (the Python loop that
+    dominates `synthesize_batch` at large B), area/power sums, or SSIM
+    labeling — cheap enough to run per surrogate featurization.
+
+    Returns ``{slack, criticality, err_mae, err_wce: (B, N) float64,
+    crit: (B, N) bool, tmax: (B,), node_ids}``; slack is normalized by
+    tmax and criticality is arrive/tmax. slack/criticality/crit are
+    exactly equal to the scalar reference (max/min sweeps over identical
+    operands); err columns match to float tolerance (summation order).
+    """
+    ca = compile_app(app.name)
+    C = np.asarray(configs, np.int64).reshape(-1, len(app.unit_nodes))
+    B = C.shape[0]
+    N = len(ca.node_ids)
+    _, _, lat_t, _ = _unit_tables(
+        app.name, apps_lib._entries_items(app, entries))
+    mae_t, wce_t = _unit_err_tables(
+        app.name, apps_lib._entries_items(app, entries))
+
+    delay = np.repeat(ca.base_delay[None, :], B, axis=0)
+    err_mae = np.zeros((B, N), np.float64)
+    err_wce = np.zeros((B, N), np.float64)
+    for j, pos in enumerate(ca.unit_pos):
+        cj = C[:, j]
+        delay[:, pos] += lat_t[j][cj]
+        err_mae[:, pos] = mae_t[j][cj]
+        err_wce[:, pos] = wce_t[j][cj]
+
+    arrive = delay.copy()
+    for src, dst in ca.fwd_groups:
+        arrive[:, dst] = np.maximum(arrive[:, dst],
+                                    arrive[:, src] + delay[:, dst])
+        # each edge forwards its source's accumulated error mass exactly
+        # once; level-ascending groups finalize sources before use
+        err_mae[:, dst] += err_mae[:, src]
+        err_wce[:, dst] += err_wce[:, src]
+    tmax = arrive.max(axis=1)
+
+    # crit bit: the same tolerance-based back-propagation as
+    # `synthesize_batch` (bit-identical stage-1 labels)
+    creq = np.where(np.abs(arrive - tmax[:, None]) < 1e-9,
+                    tmax[:, None], -1e30)
+    # slack: min-based required times — sinks carry tmax (all node delays
+    # are positive, so the max arrival lands on a sink)
+    is_sink = np.ones(N, bool)
+    for src, _ in ca.fwd_groups:
+        is_sink[src] = False
+    req = np.where(is_sink[None, :], tmax[:, None], np.inf)
+    for src, dst in ca.rev_groups:
+        ok = (creq[:, dst] > -1e29) & (
+            np.abs(arrive[:, src] + delay[:, dst] - creq[:, dst]) < 1e-9)
+        cand = np.where(ok, arrive[:, src], -np.inf)
+        creq[:, src] = np.maximum(creq[:, src], cand)
+        req[:, src] = np.minimum(req[:, src], req[:, dst] - delay[:, dst])
+
+    return {"slack": (req - arrive) / tmax[:, None],
+            "criticality": arrive / tmax[:, None],
+            "err_mae": err_mae, "err_wce": err_wce,
+            "crit": creq > -1e29, "tmax": tmax, "node_ids": ca.node_ids}
+
+
+def probe_batch(app: apps_lib.AccelDef, entries: Dict[str, Sequence],
+                configs, chunk: int = 1024) -> Dict[str, np.ndarray]:
+    """Functional-probe distortion columns for a config block.
+
+    Runs the config-batched functional model (`apps.accuracy_ssim_batch`)
+    on the tiny deterministic probe images (`apps.probe_inputs`, one per
+    scale in `apps.PROBE_SIZES`) and returns ``{probe_err8, probe_err16:
+    (B,) float64}`` where each value is 1 - SSIM vs the exact design.
+    Graph-level features: `dataset.ConfigFeaturizer` broadcasts them
+    across nodes. The compiled labeler is shared with dataset labeling
+    (`_batch_label_fn` lru cache), so the probe adds one extra jit shape,
+    not a second model."""
+    C = np.asarray(configs, np.int64).reshape(-1, len(app.unit_nodes))
+    out = {}
+    for size in apps_lib.PROBE_SIZES:
+        inp, exact_out = apps_lib.probe_inputs(app.name, size)
+        s = apps_lib.accuracy_ssim_batch(app, entries, C, inp, exact_out,
+                                         chunk=chunk)
+        out[f"probe_err{size}"] = 1.0 - s
+    return out
+
+
 def crit_sets(rep: Dict[str, np.ndarray]) -> List[set]:
     """Per-config critical-node id sets (scalar-oracle format)."""
     ids = np.asarray(rep["node_ids"])

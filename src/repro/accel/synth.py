@@ -82,6 +82,93 @@ def wire_delay(g: nx.DiGraph, nid: str) -> float:
     return WIRE_DELAY_PER_FANOUT * max(g.out_degree(nid), 1)
 
 
+def static_timing(app: AccelDef, choice: Dict[str, lib.LibEntry]
+                  ) -> Dict[str, object]:
+    """Timing-only static analysis: the arrival/required-time sweeps of
+    `synthesize` WITHOUT the SSIM labeling, jitter hashing, or area/power
+    sums — per-node features for the schema-v2 dynamic timing block.
+
+    Returns ``{tmax, nodes}`` where ``nodes[nid]`` has
+
+      on_critical_path — same bit as ``synthesize()['critical_nodes']``
+      slack            — (required - arrival) / tmax in [0, 1]; 0 on the
+                         critical path (min-based required-time sweep;
+                         sinks carry the max arrival because every node
+                         delay is positive)
+      criticality      — arrival / tmax: how much of the critical-path
+                         budget is consumed once this node settles
+      err_mae / err_wce — unit error profiles accumulated additively
+                         along the DAG (own mae/wce + the error mass of
+                         every upstream path), RAW (consumers compress
+                         with log1p — `graph.reduce_timing`)
+      probe_err8 / probe_err16 — functional-probe distortion (1 - SSIM
+                         on the tiny deterministic probe images,
+                         `apps.probe_scalar`), graph-level and therefore
+                         identical on every node
+
+    This is the scalar reference for `batch_oracle.timing_batch` +
+    `batch_oracle.probe_batch`; the property tests assert exact
+    slack/criticality/crit equality and float-tolerance err/probe
+    equality (summation order / jit batch shape differ).
+    """
+    ppa = node_ppa(app, choice)
+    acyclic = acyclic_dataflow(app)
+    delay = {nid: ppa[nid]["latency"] + wire_delay(acyclic, nid)
+             for nid in acyclic.nodes}
+    order = list(nx.topological_sort(acyclic))
+    arrive = {nid: delay[nid] for nid in order}
+    for nid in order:
+        for _, v in acyclic.out_edges(nid):
+            arrive[v] = max(arrive[v], arrive[nid] + delay[v])
+    tmax = max(arrive.values())
+
+    # min-based required-time sweep: sinks are required at tmax (positive
+    # delays put the max arrival on a sink), everyone else at the
+    # tightest successor requirement
+    req = {nid: (tmax if acyclic.out_degree(nid) == 0 else float("inf"))
+           for nid in order}
+    for nid in reversed(order):
+        for _, v in acyclic.out_edges(nid):
+            req[nid] = min(req[nid], req[v] - delay[v])
+
+    # crit bit: the same tolerance-based back-propagation as `synthesize`
+    # (bit-identical labels regardless of float noise in the slack)
+    creq = {nid: -1e30 for nid in order}
+    for nid in order:
+        if abs(arrive[nid] - tmax) < 1e-9:
+            creq[nid] = tmax
+    for nid in reversed(order):
+        for _, v in acyclic.out_edges(nid):
+            if creq[v] > -1e29 and abs(
+                    arrive[nid] + delay[v] - creq[v]) < 1e-9:
+                creq[nid] = max(creq[nid], arrive[nid])
+
+    # additive error propagation: every node starts with its own unit
+    # error (fixed components are exact) and each edge forwards the
+    # source's accumulated mass once — topological order finalizes a
+    # source before any of its out-edges fire
+    err = {}
+    for key in ("mae", "wce"):
+        acc = {n.id: (0.0 if n.fixed else float(getattr(choice[n.id], key)))
+               for n in app.nodes}
+        for nid in order:
+            for _, v in acyclic.out_edges(nid):
+                acc[v] += acc[nid]
+        err[key] = acc
+
+    from repro.accel import apps as apps_lib
+    probe = apps_lib.probe_scalar(app, choice)
+
+    nodes = {nid: {"on_critical_path": float(creq[nid] > -1e29),
+                   "slack": (req[nid] - arrive[nid]) / tmax,
+                   "criticality": arrive[nid] / tmax,
+                   "err_mae": err["mae"][nid],
+                   "err_wce": err["wce"][nid],
+                   **probe}
+             for nid in order}
+    return {"tmax": float(tmax), "nodes": nodes}
+
+
 def synthesize(app: AccelDef, choice: Dict[str, lib.LibEntry]
                ) -> Dict[str, object]:
     """Returns {area, power, latency, critical_nodes (set), node_delay}."""

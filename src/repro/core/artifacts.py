@@ -137,6 +137,10 @@ class ArtifactStore:
         if self.root is not None:
             self.root.mkdir(parents=True, exist_ok=True)
         self._memory: Dict[str, Any] = {}
+        # last-write wall-clock timestamp per memory-tier key (same time
+        # domain as disk mtimes), for `gc_checkpoints`; disk-only entries
+        # fall back to file mtime
+        self._mtimes: Dict[str, float] = {}
         self.stats = StoreStats()
         # concurrency: `_mem_lock` guards the memory tier; `_key_locks`
         # serializes writers/builders per key, so `get_or_build` races on
@@ -213,9 +217,11 @@ class ArtifactStore:
         self.stats.record_quarantine(key)
 
     def put(self, key: str, obj: Any, *, memory_only: bool = False) -> Any:
+        import time
         with self._key_lock(key):
             with self._mem_lock:
                 self._memory[key] = obj
+                self._mtimes[key] = time.time()
             p = self._path(key)
             if p is not None and not memory_only:
                 disk_obj = _to_numpy_tree(obj)
@@ -236,6 +242,7 @@ class ArtifactStore:
         with self._key_lock(key):
             with self._mem_lock:
                 self._memory.pop(key, None)
+                self._mtimes.pop(key, None)
             p = self._path(key)
             if p is not None and p.exists():
                 p.unlink()
@@ -247,6 +254,40 @@ class ArtifactStore:
         with self._mem_lock:
             mem = set(self._memory)
         return tuple(sorted(mem | set(disk)))
+
+    def gc_checkpoints(self, max_age_s: float,
+                       prefix: str = "search_ckpt") -> Tuple[str, ...]:
+        """Evict ``search_ckpt`` entries older than ``max_age_s`` seconds.
+
+        A checkpointed search that finishes evicts its own checkpoint
+        (`pipeline.stage_search`), so any checkpoint still in the store
+        belongs to a run that is either in flight or dead. In-flight runs
+        re-put the key every ``checkpoint_every`` generations, refreshing
+        its timestamp; a key whose last write is older than ``max_age_s``
+        is an orphan from a crashed/abandoned search and is swept here.
+        Age comes from the store's own put timestamps (memory tier) or the
+        pickle's file mtime (disk entries from a previous process).
+        Called periodically by `repro.launch.serve.EvalService.health`;
+        returns the evicted keys.
+        """
+        import time
+        now = time.time()
+        stale = []
+        for key in self.keys():
+            if not key.startswith(f"{prefix}-"):
+                continue
+            with self._mem_lock:
+                ts = self._mtimes.get(key)
+            if ts is None:
+                p = self._path(key)
+                try:
+                    ts = p.stat().st_mtime if p is not None else None
+                except OSError:
+                    continue      # raced with an evict: already gone
+            if ts is None or now - ts > max_age_s:
+                self.evict(key)
+                stale.append(key)
+        return tuple(stale)
 
     # -- the stage entry point --------------------------------------------
 

@@ -59,6 +59,14 @@ class AccelDataset:
     y_std: np.ndarray
     x_mean: np.ndarray
     x_std: np.ndarray
+    # feature-schema version of `x` (graph.SCHEMAS); datasets pickled
+    # before the schema refactor deserialize without the field and are
+    # treated as v1 via `schema_of`
+    schema_version: int = 1
+
+    @property
+    def schema(self) -> graph_lib.FeatureSchema:
+        return graph_lib.schema_for(getattr(self, "schema_version", 1))
 
     # Every config of one accelerator shares graph topology, so adj /
     # mask / unit_mask are (usually) B identical rows; persisting all B
@@ -103,7 +111,8 @@ class AccelDataset:
     # flat per-graph feature vector for the random-forest baseline
     def flat_features(self) -> np.ndarray:
         B = self.x.shape[0]
-        return (self.x[..., :8] * self.mask[..., None]).reshape(B, -1)
+        us = self.schema.sl("unit_stats")
+        return (self.x[..., us] * self.mask[..., None]).reshape(B, -1)
 
 
 @dataclass
@@ -201,10 +210,15 @@ def merge(datasets: Dict[str, "AccelDataset"], n_pad: Optional[int] = None,
     if not datasets:
         raise ValueError("merge() needs at least one dataset")
     names = tuple(sorted(datasets, key=graph_lib.APP_VOCAB.index))
+    versions = {getattr(datasets[a], "schema_version", 1) for a in names}
+    if len(versions) != 1:
+        raise ValueError(f"merge() needs one feature-schema version, got "
+                         f"{sorted(versions)} — rebuild the stale datasets")
+    schema = graph_lib.schema_for(versions.pop())
     dims = {datasets[a].x.shape[-1] for a in names}
-    if dims != {graph_lib.FEATURE_DIM}:
-        raise ValueError(f"merge() expects base feature dim "
-                         f"{graph_lib.FEATURE_DIM}, got {sorted(dims)}")
+    if dims != {schema.dim}:
+        raise ValueError(f"merge() expects base feature dim {schema.dim} "
+                         f"(schema v{schema.version}), got {sorted(dims)}")
     n_pad = n_pad or max(datasets[a].x.shape[1] for a in names)
     adjs, xs, masks, umasks, ys, yraws, crits, ids, cfgs = \
         [], [], [], [], [], [], [], [], []
@@ -243,6 +257,14 @@ def canonical(app: apps_lib.AccelDef, config: Dict[str, int]
 def sample_configs(app: apps_lib.AccelDef, n: int, seed: int = 0,
                    lib_entries: Optional[Dict[str, Sequence]] = None,
                    dedup: bool = True) -> List[Tuple[int, ...]]:
+    """Random (deduplicated) configuration sample over the design space.
+
+    May return FEWER than ``n`` configs: with ``dedup=True`` on a design
+    space smaller than (or close to) ``n``, rejection sampling is capped
+    at 50·n tries so a saturated space cannot loop forever. The shortfall
+    is reported via `warnings.warn` — callers that require exactly ``n``
+    rows must check ``len()`` of the result.
+    """
     rng = np.random.default_rng(seed)
     entries = lib_entries or {k.kind: lib.build_library(k.kind)
                               for k in app.unit_nodes}
@@ -261,6 +283,13 @@ def sample_configs(app: apps_lib.AccelDef, n: int, seed: int = 0,
         seen.add(key)
         out.append(key if dedup else tuple(cfg[node.id]
                                            for node in app.unit_nodes))
+    if len(out) < n:
+        import warnings
+        warnings.warn(
+            f"sample_configs({app.name!r}): dedup retry cap (50*n="
+            f"{50 * n} tries) reached with {len(out)}/{n} unique configs "
+            f"— the (canonicalized) design space is likely smaller than "
+            f"n; proceeding with {len(out)} samples", stacklevel=2)
     return out
 
 
@@ -269,29 +298,50 @@ class ConfigFeaturizer:
 
     Every configuration of one accelerator shares graph topology, so the
     normalized adjacency, mask, fixed-node rows, one-hot kind columns and
-    padding are per-graph constants; only the first 8 feature dims of the
+    padding are per-graph constants; only the unit-stats block of the
     arithmetic-unit rows (area, power, latency, mae, mre, mse, wce, approx
-    level) depend on the chosen library entry, and the critical-path
-    column on the oracle. Those are filled by table lookup / assignment —
-    O(batch) numpy ops instead of rebuilding every row in Python.
+    level) depends on the chosen library entry, the critical-path column
+    on the oracle, and — under schema v2 — the dynamic timing block on the
+    batched timing oracle (`batch_oracle.timing_batch`: per-node slack,
+    criticality, and DAG-propagated error mass). Static columns are filled
+    by table lookup / assignment, dynamic ones by one vectorized timing
+    sweep per batch — O(batch) numpy ops instead of rebuilding every row
+    in Python.
 
     `raw` feeds `build` (labels known, stats not yet); `normalized` feeds
     the DSE hot path (`features_for_configs`, the engine featurizer) and
-    is bit-identical to the per-config reference (tests/test_engine.py).
+    is bit-identical to the build path's rows (tests/test_engine.py,
+    tests/test_feature_schema.py): both paths cast the float64 timing
+    sweep to float32 once and then apply the elementwise-identical
+    standardization.
+
+    ``dynamic=False`` skips the timing sweep (the dynamic columns keep
+    their constant base values) — an ablation/measurement knob used by
+    benchmarks/engine_bench.py's overhead gate, not a serving mode.
     """
 
     def __init__(self, g: graph_lib.SimpleGraph, app: apps_lib.AccelDef,
-                 entries: Dict[str, Sequence], n_pad: int):
+                 entries: Dict[str, Sequence], n_pad: int,
+                 schema: Optional[graph_lib.FeatureSchema] = None,
+                 dynamic: bool = True):
+        self.schema = schema or graph_lib.ACTIVE_SCHEMA
         self.n_pad = n_pad
         self.n_nodes = len(g.node_ids)
         self.sizes = [len(entries[n.kind]) for n in app.unit_nodes]
+        self._graph = g
+        self._app = app
+        self._entries = entries
+        self.dynamic = dynamic and bool(self.schema.dynamic_fields)
+        self._members: Optional[List[np.ndarray]] = None
         choice0 = {n.id: entries[n.kind][0] for n in app.unit_nodes}
-        xf0 = graph_lib.node_features(g, app, choice0, crit_nodes=None)
+        xf0 = graph_lib.node_features(g, app, choice0, crit_nodes=None,
+                                      schema=self.schema)
         A, X0, M = graph_lib.pad_batch([g.adj], [xf0], n_pad)
         self.adj = A[0]                           # (N, N) normalized
         self.mask = M[0]                          # (N,)
         self.base_raw = X0[0]                     # (N, F), unit rows dummy
         self.gidx = [g.node_ids.index(n.id) for n in app.unit_nodes]
+        self._us = self.schema.sl("unit_stats")
         kind_tables: Dict[str, np.ndarray] = {}
         self.tables_raw: List[np.ndarray] = []
         for node in app.unit_nodes:
@@ -303,6 +353,63 @@ class ConfigFeaturizer:
             self.tables_raw.append(kind_tables[node.kind])
         self._norm = None
 
+    # -- dynamic timing block ----------------------------------------------
+
+    def _member_index(self) -> List[np.ndarray]:
+        """Per graph node: app-node positions of its merged members in the
+        compiled DAG's node order (lazy — needs the batch oracle)."""
+        if self._members is None:
+            from repro.accel import batch_oracle
+            ca = batch_oracle.compile_app(self._app.name)
+            pos = {nid: a for a, nid in enumerate(ca.node_ids)}
+            self._members = [
+                np.asarray([pos[m] for m in self._graph.merged_from[i]],
+                           np.int64) for i in range(self.n_nodes)]
+            # singleton fast path: one gather covers every unmerged node;
+            # only merged fixed nodes need a per-node reduction
+            self._first = np.asarray([m[0] for m in self._members],
+                                     np.int64)
+            self._multi = [i for i, m in enumerate(self._members)
+                           if len(m) > 1]
+        return self._members
+
+    def dynamic_raw(self, C: np.ndarray) -> np.ndarray:
+        """(B, n_graph_nodes, n_dyn) float32 dynamic timing features.
+
+        One `batch_oracle.timing_batch` sweep per batch, reduced onto the
+        (possibly merged) graph nodes per `graph.DYNAMIC_REDUCE` and
+        log1p-compressed where the schema says so — the single source of
+        the dynamic columns for BOTH the build path (`raw`) and the DSE
+        hot path (`normalized`), which is what makes them bit-identical.
+        """
+        from repro.accel import batch_oracle
+        fields = self.schema.dynamic_fields
+        rep = batch_oracle.timing_batch(self._app, self._entries, C)
+        if any(f in apps_lib.PROBE_FIELDS for f in fields):
+            rep.update(batch_oracle.probe_batch(self._app, self._entries,
+                                                C))
+        members = self._member_index()
+        out = np.empty((C.shape[0], self.n_nodes, len(fields)), np.float32)
+        for f_idx, f in enumerate(fields):
+            if f in apps_lib.PROBE_FIELDS:
+                # graph-level probe distortion: one value per config,
+                # broadcast across nodes (padding rows stay base-valued)
+                out[:, :, f_idx] = rep[f][:, None]
+                continue
+            col = rep[f]                             # (B, n_app_nodes)
+            take_min = graph_lib.DYNAMIC_REDUCE[f] == "min"
+            v = col[:, self._first]                  # (B, n_graph_nodes)
+            for i in self._multi:
+                mem = members[i]
+                v[:, i] = (col[:, mem].min(1) if take_min
+                           else col[:, mem].max(1))
+            if f in graph_lib._LOG1P_FIELDS:
+                v = np.log1p(v)
+            out[:, :, f_idx] = v
+        return out
+
+    # -- feature assembly --------------------------------------------------
+
     def raw(self, configs, crit: Optional[np.ndarray] = None) -> np.ndarray:
         """(B, n_pad, F) un-normalized features; ``crit`` is an optional
         (B, n_graph_nodes) critical-bit block from the batch oracle."""
@@ -310,28 +417,40 @@ class ConfigFeaturizer:
         X = np.broadcast_to(self.base_raw,
                             (C.shape[0],) + self.base_raw.shape).copy()
         for j, gj in enumerate(self.gidx):
-            X[:, gj, :8] = self.tables_raw[j][C[:, j]]
+            X[:, gj, self._us] = self.tables_raw[j][C[:, j]]
+        if self.dynamic:
+            X[:, :self.n_nodes, self.schema.dynamic_slice] = \
+                self.dynamic_raw(C)
         if crit is not None:
-            X[:, :self.n_nodes, graph_lib.CRIT_IDX] = crit
+            X[:, :self.n_nodes, self.schema.crit_index] = crit
         return X
 
     def set_norm(self, x_mean: np.ndarray, x_std: np.ndarray) -> None:
         base = ((self.base_raw - x_mean) / x_std
                 * self.mask[..., None]).astype(np.float32)
-        mu8, sd8 = x_mean[:8], x_std[:8]
+        mu8 = x_mean[self._us].astype(np.float32)
+        sd8 = x_std[self._us].astype(np.float32)
         tables = [((t - mu8) / sd8).astype(np.float32)
                   for t in self.tables_raw]
-        self._norm = (base, tables)
+        dyn = self.schema.dynamic_slice
+        mu_d = np.asarray(x_mean[dyn], np.float32)
+        sd_d = np.asarray(x_std[dyn], np.float32)
+        self._norm = (base, tables, mu_d, sd_d)
 
     def normalized(self, configs) -> np.ndarray:
         """(B, n_pad, F) features normalized with the dataset stats."""
         if self._norm is None:
             raise RuntimeError("call set_norm(x_mean, x_std) first")
-        base, tables = self._norm
+        base, tables, mu_d, sd_d = self._norm
         C = np.asarray(configs, np.int64).reshape(-1, len(self.gidx))
         X = np.broadcast_to(base, (C.shape[0],) + base.shape).copy()
         for j, gj in enumerate(self.gidx):
-            X[:, gj, :8] = tables[j][C[:, j]]
+            X[:, gj, self._us] = tables[j][C[:, j]]
+        if self.dynamic:
+            # same float32 cast + elementwise standardization the build
+            # path applies to the whole raw tensor -> bit-identical rows
+            X[:, :self.n_nodes, self.schema.dynamic_slice] = \
+                (self.dynamic_raw(C) - mu_d) / sd_d
         return X
 
 
@@ -385,14 +504,18 @@ def build(app_name: str, n_samples: int = 2000, seed: int = 0,
     elif label_backend == "loop":
         # scalar reference path: one oracle + functional-model call per
         # config (kept for parity testing and as the fallback)
+        schema = graph_lib.ACTIVE_SCHEMA
         adjs, feats, ys = [], [], []
         for cfg_idx in configs:
             choice = {node.id: entries[node.kind][i]
                       for node, i in zip(app.unit_nodes, cfg_idx)}
             rep = synth.synthesize(app, choice)
             acc = apps_lib.accuracy_ssim(app, choice, inp, exact_out)
+            timing = (synth.static_timing(app, choice)["nodes"]
+                      if schema.dynamic_fields else None)
             xf = graph_lib.node_features(g, app, choice,
-                                         crit_nodes=rep["critical_nodes"])
+                                         crit_nodes=rep["critical_nodes"],
+                                         timing=timing, schema=schema)
             adjs.append(g.adj)
             feats.append(xf)
             ys.append([rep["area"], rep["power"], rep["latency"], acc])
@@ -402,8 +525,9 @@ def build(app_name: str, n_samples: int = 2000, seed: int = 0,
         raise ValueError(f"label_backend must be 'batched' or 'loop', "
                          f"got {label_backend!r}")
 
-    crit = X[..., graph_lib.CRIT_IDX].copy()
-    X[..., graph_lib.CRIT_IDX] = 0.0
+    schema = graph_lib.ACTIVE_SCHEMA
+    crit = X[..., schema.crit_index].copy()
+    X[..., schema.crit_index] = 0.0
     unit_mask = np.zeros_like(M)
     unit_ids = {n.id for n in app.unit_nodes}
     for j, nid in enumerate(g.node_ids):
@@ -414,12 +538,14 @@ def build(app_name: str, n_samples: int = 2000, seed: int = 0,
     y = (y_raw - y_mean) / y_std
     x_mean = X.reshape(-1, X.shape[-1]).mean(0)
     x_std = X.reshape(-1, X.shape[-1]).std(0) + 1e-6
-    # one-hot + crit dims: leave unnormalized
-    x_mean[graph_lib.CRIT_IDX:] = 0.0
-    x_std[graph_lib.CRIT_IDX:] = 1.0
+    # one-hot / crit-bit columns stay raw; the schema says which
+    keep = schema.normalize_mask()
+    x_mean[~keep] = 0.0
+    x_std[~keep] = 1.0
     Xn = (X - x_mean) / x_std * M[..., None]
     return AccelDataset(app_name, g, A, Xn, M, unit_mask, y, y_raw, crit,
-                        configs, y_mean, y_std, x_mean, x_std)
+                        configs, y_mean, y_std, x_mean, x_std,
+                        schema_version=schema.version)
 
 
 def featurizer_for(ds: AccelDataset, app: apps_lib.AccelDef,
@@ -434,7 +560,8 @@ def featurizer_for(ds: AccelDataset, app: apps_lib.AccelDef,
     key = _entries_sig(entries)
     feat = cache.get(key)
     if feat is None:
-        feat = ConfigFeaturizer(ds.graph, app, entries, ds.x.shape[1])
+        feat = ConfigFeaturizer(ds.graph, app, entries, ds.x.shape[1],
+                                schema=ds.schema)
         feat.set_norm(ds.x_mean, ds.x_std)
         cache[key] = feat
     return feat

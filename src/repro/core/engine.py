@@ -179,6 +179,7 @@ class _ConfigFeaturizer:
 
         feat = ds_lib.featurizer_for(ds, app, entries)
         self._feat = feat
+        self.schema = feat.schema
         self.n_pad = feat.n_pad
         self.sizes = feat.sizes
         self.adj = feat.adj                                # (N, N) normalized
@@ -224,8 +225,9 @@ def _make_kernel_predict(two_cfg, params, adj_row: np.ndarray,
     """
     import jax
     import jax.numpy as jnp
-    from repro.core.graph import CRIT_IDX
     from repro.kernels import ops
+
+    crit_idx = two_cfg.schema.crit_index
 
     def scaled_adj(cfg):
         a = np.asarray(adj_row, np.float32)
@@ -270,7 +272,7 @@ def _make_kernel_predict(two_cfg, params, adj_row: np.ndarray,
             bit = (jax.nn.sigmoid(crit_logits) > 0.5).astype(X.dtype)
         else:
             bit = jnp.zeros_like(crit_logits)
-        x2 = X.at[..., CRIT_IDX].set(bit * mask)
+        x2 = X.at[..., crit_idx].set(bit * mask)
         h2 = stack(s2, params.stage2, adj_k, x2, mask)
         return readout(s2, params.stage2, h2, mask)
 
@@ -333,11 +335,17 @@ class SurrogateEngine:
                  chunk_size: int = 512, fixed_shape: bool = False,
                  cache: bool = True, max_cache: int = 1_000_000,
                  obj_cols: Optional[int] = None, retry=None,
-                 nan_guard: bool = True, nan_retries: int = 2):
+                 nan_guard: bool = True, nan_retries: int = 2,
+                 schema_version: Optional[int] = None):
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         self._batch_fn = batch_fn
         self.backend = backend
+        # feature-schema version of the backend's featurization, when it
+        # has one (the GNN/RF paths): memo keys are prefixed with it so a
+        # cache shared or persisted across schema bumps can never serve a
+        # stale-layout row to a new-schema model
+        self.schema_version = schema_version
         self.chunk_size = int(chunk_size)
         self.fixed_shape = fixed_shape
         self.cache_enabled = cache
@@ -398,22 +406,26 @@ class SurrogateEngine:
 
     def _call_locked(self, configs: Sequence[Config]) -> np.ndarray:
         t_wall = time.perf_counter()
-        keys = [tuple(int(v) for v in c) for c in configs]
+        raw = [tuple(int(v) for v in c) for c in configs]
+        sv = self.schema_version
+        keys = raw if sv is None else [(sv,) + k for k in raw]
         self.stats.update(calls=1, configs=len(keys))
         self.stats.bump_max(max_batch=len(keys))
-        miss: List[Config] = []
+        miss: List[Config] = []       # raw configs for the backend
+        miss_keys: List[Config] = []  # their (possibly prefixed) memo keys
         seen = set()
-        for k in keys:
+        for k, r in zip(keys, raw):
             if k not in self._cache and k not in seen:
                 seen.add(k)
-                miss.append(k)
+                miss.append(r)
+                miss_keys.append(k)
         self.stats.update(cache_hits=len(keys) - len(miss))
         if miss:
             t0 = time.perf_counter()
             rows = self._eval_chunked(miss)
             self.stats.update(eval_time_s=time.perf_counter() - t0,
                               evaluated=len(miss))
-            for k, r in zip(miss, rows):
+            for k, r in zip(miss_keys, rows):
                 self._cache[k] = r
         out = np.stack([self._cache[k] for k in keys], 0).astype(np.float64)
         if not self.cache_enabled:
@@ -647,6 +659,12 @@ class SurrogateEngine:
         from repro.kernels import ops as kernel_ops
 
         feat = _ConfigFeaturizer(ds, app, entries)
+        sv = getattr(two_cfg, "schema_version", 1)
+        if sv != feat.schema.version:
+            raise ValueError(
+                f"model was trained on feature schema v{sv} but the "
+                f"dataset featurizes with v{feat.schema.version} — "
+                f"rebuild the stale artifact")
         jax_predict = _make_jax_predict(two_cfg, params, feat.adj, feat.mask)
         predict, backend = jax_predict, "jax"
         want_kernel = (use_kernel == "on"
@@ -685,7 +703,7 @@ class SurrogateEngine:
             return y
 
         return cls(batch_fn, backend=backend, chunk_size=chunk_size,
-                   fixed_shape=True, cache=cache)
+                   fixed_shape=True, cache=cache, schema_version=sv)
 
     @classmethod
     def from_gnn_shared(cls, two_cfg, params, merged, app_name: str,
@@ -714,7 +732,7 @@ class SurrogateEngine:
         ds = merged.per_app[app_name]
         app = apps_lib.APPS[app_name]
         feat = ds_lib.ConfigFeaturizer(ds.graph, app, entries,
-                                       merged.n_pad)
+                                       merged.n_pad, schema=ds.schema)
         feat.set_norm(ds.x_mean, ds.x_std)
         block = graph_lib.app_block(app_name, feat.mask)      # (N, A)
         jax_predict = _make_jax_predict(two_cfg, params, feat.adj,
@@ -731,7 +749,8 @@ class SurrogateEngine:
             return y
 
         return cls(batch_fn, backend="jax-shared", chunk_size=chunk_size,
-                   fixed_shape=True, cache=cache)
+                   fixed_shape=True, cache=cache,
+                   schema_version=feat.schema.version)
 
     @classmethod
     def from_gnn_ensemble(cls, ens, ds, app, entries: Dict[str, Sequence],
@@ -777,7 +796,8 @@ class SurrogateEngine:
             return np.concatenate([mean, std], 1)
 
         return cls(batch_fn, backend="gnn-ensemble", chunk_size=chunk_size,
-                   fixed_shape=True, cache=cache, obj_cols=n_obj)
+                   fixed_shape=True, cache=cache, obj_cols=n_obj,
+                   schema_version=feat.schema.version)
 
     @classmethod
     def from_rforest(cls, rf_models: Dict[int, "object"], ds, app,
@@ -792,9 +812,10 @@ class SurrogateEngine:
         evaluator fed un-masked padding rows at DSE time.
         """
         feat = _ConfigFeaturizer(ds, app, entries)
+        us = feat.schema.sl("unit_stats")
 
         def batch_fn(configs):
-            X = feat(configs)[:, :, :8].reshape(len(configs), -1)
+            X = feat(configs)[:, :, us].reshape(len(configs), -1)
             preds = np.stack(
                 [rf_models[i].predict(X) * ds.y_std[i] + ds.y_mean[i]
                  for i in range(4)], 1)
@@ -802,7 +823,8 @@ class SurrogateEngine:
             return preds
 
         return cls(batch_fn, backend="rforest", chunk_size=chunk_size,
-                   fixed_shape=False, cache=cache)
+                   fixed_shape=False, cache=cache,
+                   schema_version=feat.schema.version)
 
     @classmethod
     def from_oracle(cls, app, entries: Dict[str, Sequence], inp, exact_out,

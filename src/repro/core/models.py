@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gnn
-from repro.core.graph import CRIT_IDX
+from repro.core import graph as graph_lib
 
 TARGETS = ("area", "power", "latency", "ssim")
 
@@ -30,6 +30,15 @@ TARGETS = ("area", "power", "latency", "ssim")
 class TwoStageConfig:
     gnn: gnn.GNNConfig = gnn.GNNConfig()
     use_critical_path: bool = True
+    # feature-schema version the model was trained against (graph.SCHEMAS);
+    # locates the crit column instead of a hard-coded CRIT_IDX. Configs
+    # pickled before the schema refactor deserialize without the field and
+    # resolve to v1 via `schema` (getattr default).
+    schema_version: int = graph_lib.ACTIVE_SCHEMA.version
+
+    @property
+    def schema(self) -> graph_lib.FeatureSchema:
+        return graph_lib.schema_for(getattr(self, "schema_version", 1))
 
     @property
     def stage1(self) -> gnn.GNNConfig:
@@ -78,7 +87,7 @@ def predict(cfg: TwoStageConfig, params: TwoStageParams, adj, x, mask,
         bit = teacher_crit
     else:
         bit = (jax.nn.sigmoid(crit_logits) > 0.5).astype(x.dtype)
-    x2 = x.at[..., CRIT_IDX].set(bit * mask)
+    x2 = x.at[..., cfg.schema.crit_index].set(bit * mask)
     y = gnn.apply(cfg.stage2, params.stage2, adj, x2, mask, rng=r2)
     return y, crit_logits
 

@@ -149,8 +149,13 @@ def _prune_spec(cfg: PipelineConfig) -> Dict:
 
 
 def _dataset_spec(cfg: PipelineConfig) -> Dict:
+    # feature_schema: bumping graph.ACTIVE_SCHEMA re-keys the dataset —
+    # and, through the nested specs below, every downstream train /
+    # engine / search artifact — so a store carrying old-layout tensors
+    # can never serve them to a new-schema model
     return {**_prune_spec(cfg), "n_samples": cfg.n_samples,
-            "seed": cfg.seed}
+            "seed": cfg.seed,
+            "feature_schema": graph_lib.ACTIVE_SCHEMA.version}
 
 
 def _train_spec(cfg: PipelineConfig) -> Dict:
@@ -256,7 +261,8 @@ def stage_train(cfg: PipelineConfig, store: ArtifactStore,
         gnn=gnn.GNNConfig(arch=cfg.gnn_arch, n_layers=cfg.n_layers,
                           hidden=cfg.hidden,
                           feature_dim=ds.x.shape[-1]),
-        use_critical_path=cfg.use_critical_path)
+        use_critical_path=cfg.use_critical_path,
+        schema_version=getattr(ds, "schema_version", 1))
 
     def build() -> TrainArtifact:
         tr, te = ds.split(0.9)
@@ -516,7 +522,9 @@ def unified_surrogate(apps: Sequence[str], cfg: PipelineConfig,
         gnn=gnn.GNNConfig(arch=cfg.gnn_arch, n_layers=cfg.n_layers,
                           hidden=cfg.hidden,
                           feature_dim=graph_lib.MERGED_FEATURE_DIM),
-        use_critical_path=cfg.use_critical_path)
+        use_critical_path=cfg.use_critical_path,
+        schema_version=getattr(
+            datasets[next(iter(apps))], "schema_version", 1))
     tc = training.TrainConfig(epochs=cfg.epochs, seed=cfg.seed,
                               backend=cfg.train_backend,
                               patience=cfg.early_stop_patience)

@@ -198,6 +198,14 @@ class EvalService:
                       default deadline for `result`/`results` calls made
                       with ``timeout=None`` — a caller never blocks
                       forever on a request whose handler died.
+        checkpoint_gc_age_s:
+                      every `health` call sweeps ``search_ckpt`` store
+                      entries whose last write is older than this many
+                      seconds (`ArtifactStore.gc_checkpoints`) — orphans
+                      of crashed/abandoned checkpointed searches that
+                      would otherwise accumulate in a resident store
+                      forever. ``None`` disables the sweep. Keep it well
+                      above the slowest tenant's checkpoint cadence.
 
     Results are deterministic and bit-identical to the one-shot path no
     matter how many clients are in flight: engines memoize per config
@@ -210,7 +218,8 @@ class EvalService:
     def __init__(self, store=None, *, coalesce: bool = True,
                  max_workers: int = 8, drain_wait_s: float = 0.02,
                  max_inflight: Optional[int] = 256, retry=None,
-                 result_timeout_s: float = 600.0):
+                 result_timeout_s: float = 600.0,
+                 checkpoint_gc_age_s: Optional[float] = 3600.0):
         from concurrent.futures import ThreadPoolExecutor
 
         from repro.core.artifacts import ArtifactStore
@@ -221,6 +230,14 @@ class EvalService:
         self.max_inflight = max_inflight
         self.retry = retry
         self.result_timeout_s = result_timeout_s
+        # age past which an orphaned `search_ckpt` store entry (from a
+        # crashed / abandoned checkpointed search) is swept by `health()`
+        # via `ArtifactStore.gc_checkpoints`; None disables the sweep.
+        # Must comfortably exceed the slowest tenant's checkpoint
+        # interval, or a live search's checkpoint could be collected
+        # between its own refreshes.
+        self.checkpoint_gc_age_s = checkpoint_gc_age_s
+        self._ckpt_gc_evicted = 0
         self._n_inflight = 0
         self._tenants: Dict[str, _Tenant] = {}
         self._pool = ThreadPoolExecutor(
@@ -624,7 +641,16 @@ class EvalService:
         thread is alive; ``queue_depth`` is the per-tenant count of
         submissions waiting for a drain wave; ``retries``/``quarantined``
         surface the engines' fault counters so silent fault-healing is
-        visible from outside."""
+        visible from outside. Each call also sweeps orphaned search
+        checkpoints older than ``checkpoint_gc_age_s`` from the store
+        (`ArtifactStore.gc_checkpoints` — health polling doubles as the
+        GC heartbeat); ``checkpoint_gc`` reports the sweep."""
+        evicted: Tuple[str, ...] = ()
+        if self.checkpoint_gc_age_s is not None:
+            evicted = self.store.gc_checkpoints(self.checkpoint_gc_age_s)
+            self._ckpt_gc_evicted += len(evicted)
+        remaining = sum(k.startswith("search_ckpt-")
+                        for k in self.store.keys())
         with self._lock:
             tenants = dict(self._tenants)
             batchers = [th for th, _ in self._batchers.values()]
@@ -647,6 +673,9 @@ class EvalService:
                         for name, t in tenants.items()},
             "quarantined": {name: t.engine.stats.quarantined
                             for name, t in tenants.items()},
+            "checkpoint_gc": {"evicted_now": len(evicted),
+                              "evicted_total": self._ckpt_gc_evicted,
+                              "remaining": remaining},
         }
 
     def close(self) -> None:

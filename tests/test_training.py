@@ -221,8 +221,11 @@ def test_early_stopping_scan_loop_agree(small_ds):
         cfg, tr, training.TrainConfig(**kw, backend="loop"),
         return_history=True)
     assert h_s.epochs_run == h_l.epochs_run
+    # rtol absorbs backend fusion-order noise, which compounds over the
+    # high-lr epochs (grew past atol=1e-6 alone with the wider v2 features)
     np.testing.assert_allclose(h_s.val_loss[:h_s.epochs_run],
-                               h_l.val_loss[:h_l.epochs_run], atol=1e-6)
+                               h_l.val_loss[:h_l.epochs_run],
+                               rtol=1e-5, atol=1e-6)
     # looser than the no-early-stop parity: when two epochs' val losses
     # tie within float noise (~1e-6), the backends may snapshot different
     # "best" epochs, which shows up as a small param delta
