@@ -5,34 +5,51 @@ GNN surrogate; this benchmark quantifies what the engine subsystem buys
 over the naive path the pipeline used before (per-config Python
 featurization + one jit dispatch per config):
 
-    PYTHONPATH=src python benchmarks/engine_bench.py [--smoke]
-        [--batch 1024] [--out BENCH_engine.json]
+    PYTHONPATH=src python benchmarks/engine_bench.py [--mode smoke|full]
+        [--batch 1024] [--devices N] [--out BENCH_engine.json]
 
 Measures
   * naive_cps    — configs/sec evaluating one config per call through
                    `dataset.features_for_configs` + jit'd `models.predict`
                    (timed on a subsample, it is that slow);
   * batched_cps  — configs/sec through the engine on a cold cache at
-                   ``--batch`` configs per call;
+                   ``--batch`` configs per call (featurize/compute
+                   overlap on — the default pipelined path);
+  * overlap      — the same engine with ``overlap=False`` (strictly
+                   serial chunk loop) plus the ``overlap_fraction``
+                   stat, isolating what the prefetch pipeline hides;
+  * sharded      — an engine with ``devices=0`` (every local device)
+                   against the single-device engine, rows checked
+                   bit-identical (`np.array_equal`); ``--devices N``
+                   forces N host devices via XLA_FLAGS *before* jax
+                   loads, so CPU CI can exercise an 8-way drain;
   * cached_cps   — same batch replayed permuted (memo-cache serve rate);
   * ragged chunk accounting on a non-power-of-two batch;
   * dynamic-featurization overhead — the schema-v2 timing block runs a
     batched oracle sweep plus the tiny-image functional probe per cold
     batch (`ConfigFeaturizer.dynamic_raw`); the same engine with a
-    ``dynamic=False`` featurizer is the static baseline and the
-    end-to-end slowdown is GATED at <= 1.5x (the featurizer-only ratio
-    is reported unguarded — the GNN forward pass dominates the hot
-    path, which is exactly why the sweep is affordable).
+    ``dynamic=False`` featurizer is the static baseline. With overlap
+    the sweep runs on a worker thread behind device compute, so the
+    end-to-end gate tightens from <= 1.5x to <= 1.05x on full-mode
+    >= 8-core hosts (the featurizer-only ratio is reported unguarded —
+    the GNN forward pass dominates the hot path, which is exactly why
+    the sweep is affordable).
 
 Writes a JSON report (default BENCH_engine.json in the repo root) and
-prints CSV-ish rows like benchmarks/run.py. `--smoke` shrinks dataset and
-training (CI uses it); the measured batch size stays >= 1024 so the
-headline speedup is comparable across modes.
+prints CSV-ish rows like benchmarks/run.py. ``--mode smoke`` (or the
+legacy ``--smoke`` alias) shrinks dataset and training (CI uses it); the
+measured batch size stays >= 1024 so the headline speedup is comparable
+across modes. Speedup gates scale with the host: the sharded >= 1.5x
+and overlap <= 1.05x gates apply in full mode on >= 8-core hosts where
+the device axis can actually spread (train_bench precedent); smaller
+hosts keep a no-catastrophic-regression floor plus the bit-identity
+check, which is host-independent.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
@@ -90,25 +107,49 @@ def sample_configs(app, entries, n: int, seed: int = 1):
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", choices=("smoke", "full"), default=None,
+                    help="smoke = small dataset/training for CI")
     ap.add_argument("--smoke", action="store_true",
-                    help="small dataset/training for CI")
+                    help="legacy alias for --mode smoke")
     ap.add_argument("--batch", type=int, default=1024,
                     help="engine batch size (acceptance floor: 1024)")
     ap.add_argument("--naive-n", type=int, default=48,
                     help="configs timed through the naive per-config path")
     ap.add_argument("--chunk", type=int, default=512,
                     help="engine chunk size")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force this many host platform devices via "
+                         "XLA_FLAGS (0 = leave the host as-is); lets CPU "
+                         "CI measure an 8-way sharded drain")
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args()
+    smoke = args.smoke or args.mode == "smoke"
 
+    # Device forcing must land in the environment BEFORE anything imports
+    # jax — which is why every repro import in this file sits inside a
+    # function body below this line.
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+
+    from repro.core.artifacts import enable_compilation_cache
     from repro.core.engine import SurrogateEngine
 
-    n_samples, epochs = (160, 6) if args.smoke else (600, 25)
+    # Persistent XLA compilation cache: setup_s is dominated by
+    # recompilation of shapes traced on every previous run, so warm runs
+    # on the same host skip straight to execution.
+    cache_dir = enable_compilation_cache()
+
+    n_samples, epochs = (160, 6) if smoke else (600, 25)
     t0 = time.time()
     app, entries, ds, two_cfg, params = build_surrogate(n_samples, epochs)
     setup_s = time.time() - t0
     print(f"engine_bench,setup,n_samples={n_samples},epochs={epochs},"
-          f"time_s={setup_s:.1f}")
+          f"devices={len(jax.devices())},time_s={setup_s:.1f},"
+          f"xla_cache={cache_dir}")
 
     configs = sample_configs(app, entries, args.batch)
 
@@ -147,11 +188,53 @@ def main() -> None:
     cold = engine.stats.as_dict()
     print(f"engine_bench,batched,backend={engine.backend},"
           f"configs={len(configs)},time_s={batched_s:.2f},"
-          f"configs_per_sec={batched_cps:.1f},chunks={cold['chunks']}")
+          f"configs_per_sec={batched_cps:.1f},chunks={cold['chunks']},"
+          f"overlap_fraction={cold['overlap_fraction']:.2f}")
 
     # engine and naive path must agree (same model, same features)
     np.testing.assert_allclose(batched_rows[:n_naive], naive_rows,
                                rtol=1e-4, atol=1e-4)
+
+    # -- overlap off: the strictly serial chunk loop -----------------------
+    engine_serial = SurrogateEngine.from_gnn(two_cfg, params, ds, app,
+                                             entries, chunk_size=args.chunk,
+                                             overlap=False)
+    engine_serial(configs[:args.chunk])    # shapes already cached
+
+    def serial_cold():
+        engine_serial.clear_cache()
+        engine_serial.reset_stats()
+        return engine_serial(configs)
+
+    serial_rows, serial_s = best_of(serial_cold)
+    serial_cps = len(configs) / serial_s
+    assert np.array_equal(batched_rows, serial_rows), \
+        "overlap pipeline changed engine rows"
+    print(f"engine_bench,overlap,on_cps={batched_cps:.1f},"
+          f"off_cps={serial_cps:.1f},"
+          f"gain={batched_cps / serial_cps:.2f}x")
+
+    # -- sharded drain: config axis spread over every local device ---------
+    engine_sharded = SurrogateEngine.from_gnn(two_cfg, params, ds, app,
+                                              entries, chunk_size=args.chunk,
+                                              devices=0)
+    engine_sharded(configs[:args.chunk])   # compile the sharded chunk shape
+
+    def sharded_cold():
+        engine_sharded.clear_cache()
+        engine_sharded.reset_stats()
+        return engine_sharded(configs)
+
+    sharded_rows, sharded_s = best_of(sharded_cold)
+    sharded_cps = len(configs) / sharded_s
+    sharded_speedup = sharded_cps / batched_cps
+    # acceptance: sharding is invisible in values — bit-identical, not
+    # merely allclose (zero-communication leading-axis split)
+    sharded_identical = bool(np.array_equal(batched_rows, sharded_rows))
+    print(f"engine_bench,sharded,devices={engine_sharded.devices},"
+          f"configs_per_sec={sharded_cps:.1f},"
+          f"speedup_vs_single={sharded_speedup:.2f}x,"
+          f"bit_identical={sharded_identical}")
 
     # -- warm cache replay (permuted order) --------------------------------
     engine.reset_stats()
@@ -214,39 +297,74 @@ def main() -> None:
           f"chunks={rag['chunks']},padded={rag['padded']}")
 
     speedup = batched_cps / naive_cps
+    cpus = os.cpu_count() or 1
     report = {
-        "mode": "smoke" if args.smoke else "full",
+        "mode": "smoke" if smoke else "full",
         "app": app.name,
         "backend": engine.backend,
         "batch": len(configs),
         "chunk_size": args.chunk,
+        "host_cpus": cpus,
         "naive_configs_per_sec": round(naive_cps, 1),
         "batched_configs_per_sec": round(batched_cps, 1),
         "cached_configs_per_sec": round(cached_cps, 1),
         "speedup_batched_vs_naive": round(speedup, 1),
         "cache_hit_rate_on_replay": warm["cache_hit_rate"],
         "ragged": {"configs": len(ragged), "chunks": rag["chunks"],
-                   "padded_rows": rag["padded"]},
+                   "padded_rows": rag["padded"],
+                   "padded_fraction": round(rag["padded_fraction"], 3)},
+        "overlap": {
+            "on_configs_per_sec": round(batched_cps, 1),
+            "off_configs_per_sec": round(serial_cps, 1),
+            "gain_vs_serial": round(batched_cps / serial_cps, 3),
+            "overlap_fraction": round(cold["overlap_fraction"], 3)},
+        "sharded": {
+            "devices": engine_sharded.devices,
+            "forced_devices": args.devices,
+            "configs_per_sec": round(sharded_cps, 1),
+            "speedup_vs_single_device": round(sharded_speedup, 2),
+            "bit_identical_to_single_device": sharded_identical},
         "dynamic_featurization": {
             "schema_version": ds.schema_version,
             "static_configs_per_sec": round(static_cps, 1),
             "overhead_vs_static": round(dyn_overhead, 3),
             "featurizer_only_ratio": round(feat_ratio, 2)},
         "setup_s": round(setup_s, 1),
+        "compilation_cache_dir": cache_dir,
     }
     out = Path(args.out)
     out.write_text(json.dumps(report, indent=2) + "\n")
     print(f"engine_bench,summary,speedup={speedup:.1f}x,"
           f"report={out}")
+    if not sharded_identical:
+        raise SystemExit(
+            "engine_bench: sharded engine rows diverged from the "
+            "single-device engine (must be bit-identical)")
     if speedup < 5.0:
         raise SystemExit(
             f"engine_bench: batched speedup {speedup:.1f}x below the 5x "
             f"acceptance floor")
-    if dyn_overhead > 1.5:
+    # Host-scaled perf gates (train_bench precedent): on a full-mode
+    # >= 8-core host the sharded drain must pay for itself and overlap
+    # must hide the dynamic sweep; smaller hosts (1-2 core CI runners,
+    # forced devices time-slicing one core) keep honest floors — sharding
+    # and threading must at least not be catastrophic there.
+    full_gates = not smoke and cpus >= 8
+    if full_gates and engine_sharded.devices >= 2:
+        if sharded_speedup < 1.5:
+            raise SystemExit(
+                f"engine_bench: sharded drain {sharded_speedup:.2f}x vs "
+                f"single device, below the 1.5x full-mode gate")
+    elif sharded_speedup < 0.5:
+        raise SystemExit(
+            f"engine_bench: sharded drain {sharded_speedup:.2f}x vs "
+            f"single device — catastrophic regression (floor 0.5x)")
+    overhead_gate = 1.05 if full_gates else 1.5
+    if dyn_overhead > overhead_gate:
         raise SystemExit(
             f"engine_bench: dynamic featurization costs "
             f"{dyn_overhead:.2f}x the static featurizer on the DSE hot "
-            f"path (gate: <= 1.5x)")
+            f"path (gate: <= {overhead_gate}x)")
 
 
 if __name__ == "__main__":

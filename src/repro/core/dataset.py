@@ -19,6 +19,7 @@ smaller; pass --paper-faithful in benchmarks to use the original sizes.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -333,6 +334,12 @@ class ConfigFeaturizer:
         self._entries = entries
         self.dynamic = dynamic and bool(self.schema.dynamic_fields)
         self._members: Optional[List[np.ndarray]] = None
+        # `normalized`/`dynamic_raw` run on the engine's featurize worker
+        # thread (the overlap pipeline) while other engines sharing this
+        # featurizer (`featurizer_for` caches per dataset) may call it
+        # concurrently; the lock makes the lazy member-index build
+        # single-shot instead of merely idempotent
+        self._members_lock = threading.Lock()
         choice0 = {n.id: entries[n.kind][0] for n in app.unit_nodes}
         xf0 = graph_lib.node_features(g, app, choice0, crit_nodes=None,
                                       schema=self.schema)
@@ -358,20 +365,23 @@ class ConfigFeaturizer:
     def _member_index(self) -> List[np.ndarray]:
         """Per graph node: app-node positions of its merged members in the
         compiled DAG's node order (lazy — needs the batch oracle)."""
-        if self._members is None:
-            from repro.accel import batch_oracle
-            ca = batch_oracle.compile_app(self._app.name)
-            pos = {nid: a for a, nid in enumerate(ca.node_ids)}
-            self._members = [
-                np.asarray([pos[m] for m in self._graph.merged_from[i]],
-                           np.int64) for i in range(self.n_nodes)]
-            # singleton fast path: one gather covers every unmerged node;
-            # only merged fixed nodes need a per-node reduction
-            self._first = np.asarray([m[0] for m in self._members],
-                                     np.int64)
-            self._multi = [i for i, m in enumerate(self._members)
-                           if len(m) > 1]
-        return self._members
+        with self._members_lock:
+            if self._members is None:
+                from repro.accel import batch_oracle
+                ca = batch_oracle.compile_app(self._app.name)
+                pos = {nid: a for a, nid in enumerate(ca.node_ids)}
+                members = [
+                    np.asarray([pos[m]
+                                for m in self._graph.merged_from[i]],
+                               np.int64) for i in range(self.n_nodes)]
+                # singleton fast path: one gather covers every unmerged
+                # node; only merged fixed nodes need a per-node reduction
+                self._first = np.asarray([m[0] for m in members],
+                                         np.int64)
+                self._multi = [i for i, m in enumerate(members)
+                               if len(m) > 1]
+                self._members = members
+            return self._members
 
     def dynamic_raw(self, C: np.ndarray) -> np.ndarray:
         """(B, n_graph_nodes, n_dyn) float32 dynamic timing features.

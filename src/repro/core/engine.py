@@ -16,6 +16,19 @@ this module provides the production implementation of that callable:
       power-of-two bucket, so the jit cache holds at most
       ``log2(chunk_size) + 1`` compiled shapes no matter how ragged the
       incoming batches are;
+    * **device-sharded dispatch** — with ``devices > 1`` the GNN paths
+      split every chunk along the config axis over the host's devices
+      (`repro.distributed.meshes.shard_leading_axis`): per-row compute is
+      fully independent, so the sharded wave is bit-identical to the
+      single-device one (proven by tests/test_engine_sharded.py the same
+      way test_islands_batched.py proves fleet identity);
+    * **featurize/compute overlap** — the GNN backends are
+      `PipelinedBackend`s (prepare → dispatch → collect); with ≥ 2 chunks
+      a worker thread featurizes chunk *k+1* on the host (the schema-v2
+      timing sweep + functional probe) while chunk *k* executes on
+      device, and host transfers are deferred until every chunk is in
+      flight — the LM decode-pipelining idiom. ``stats.overlap_fraction``
+      reports how much featurization was hidden;
     * **config-key memoization** — NSGA-II/III re-evaluations of surviving
       parents (and the stagnation-restart re-injections) are free across
       generations; duplicates inside a single batch are evaluated once;
@@ -39,15 +52,23 @@ benchmarks/engine_bench.py for the batched-vs-naive throughput numbers.
 from __future__ import annotations
 
 import itertools
+import queue as queue_lib
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 Config = Tuple[int, ...]
 BatchFn = Callable[[Sequence[Config]], np.ndarray]
+
+# fraction of a call's backend rows that may be ragged padding before the
+# engine warns (once per engine): chronic padding at this level means the
+# caller's batch sizes fight the power-of-two buckets and chunk_size
+# should be retuned
+PADDING_WARN_FRACTION = 0.25
 
 
 # --------------------------------------------------------------------------
@@ -91,6 +112,22 @@ class EngineStats:
         eval_time_s:  time inside the backend batch function.
         wall_time_s:  end-to-end time inside the engine (incl. cache
                       assembly).
+        devices:      device count the backend shards chunks over (1 =
+                      single-device; set at engine construction and
+                      preserved across `reset_stats`).
+        featurize_s:  host time in the pipelined backend's prepare stage
+                      (featurization: table lookup + dynamic timing
+                      sweep + functional probe).
+        dispatch_s:   host time issuing device computation (non-blocking
+                      under JAX async dispatch, so this is enqueue cost,
+                      not compute).
+        collect_s:    time blocked on device→host transfer + objective
+                      post-processing (denorm, ssim flip). Device compute
+                      not hidden by the pipeline surfaces here.
+        overlapped_s: the slice of ``featurize_s`` that ran while earlier
+                      chunks were executing on device — featurization the
+                      pipeline hid entirely. ``overlap_fraction`` is the
+                      hidden share.
     """
     calls: int = 0
     configs: int = 0
@@ -105,6 +142,11 @@ class EngineStats:
     quarantined: int = 0
     eval_time_s: float = 0.0
     wall_time_s: float = 0.0
+    devices: int = 1
+    featurize_s: float = 0.0
+    dispatch_s: float = 0.0
+    collect_s: float = 0.0
+    overlapped_s: float = 0.0
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -136,6 +178,20 @@ class EngineStats:
         benefit; > 1 means cross-request batching is happening)."""
         return self.submits / self.drains if self.drains else 0.0
 
+    @property
+    def padded_fraction(self) -> float:
+        """Share of backend rows that were ragged-chunk padding waste."""
+        total = self.evaluated + self.padded
+        return self.padded / total if total else 0.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Share of host featurization hidden behind device compute
+        (0.0 = fully serial; approaches 1.0 when every chunk after the
+        first was featurized while a prior chunk ran on device)."""
+        return self.overlapped_s / self.featurize_s \
+            if self.featurize_s else 0.0
+
     def as_dict(self) -> Dict[str, float]:
         with self._lock:
             snap = {"calls": self.calls, "configs": self.configs,
@@ -147,7 +203,12 @@ class EngineStats:
                     "retries": self.retries,
                     "quarantined": self.quarantined,
                     "eval_time_s": round(self.eval_time_s, 4),
-                    "wall_time_s": round(self.wall_time_s, 4)}
+                    "wall_time_s": round(self.wall_time_s, 4),
+                    "devices": self.devices,
+                    "featurize_s": round(self.featurize_s, 4),
+                    "dispatch_s": round(self.dispatch_s, 4),
+                    "collect_s": round(self.collect_s, 4),
+                    "overlapped_s": round(self.overlapped_s, 4)}
         snap["cache_hit_rate"] = round(
             snap["cache_hits"] / snap["configs"], 4) if snap["configs"] \
             else 0.0
@@ -156,6 +217,12 @@ class EngineStats:
             if snap["wall_time_s"] else 0.0
         snap["batch_occupancy"] = round(
             snap["submits"] / snap["drains"], 3) if snap["drains"] else 0.0
+        total = snap["evaluated"] + snap["padded"]
+        snap["padded_fraction"] = round(snap["padded"] / total, 4) \
+            if total else 0.0
+        snap["overlap_fraction"] = round(
+            snap["overlapped_s"] / snap["featurize_s"], 4) \
+            if snap["featurize_s"] else 0.0
         return snap
 
 
@@ -187,6 +254,79 @@ class _ConfigFeaturizer:
 
     def __call__(self, configs: Sequence[Config]) -> np.ndarray:
         return self._feat.normalized(configs)
+
+
+# --------------------------------------------------------------------------
+# pipelined backends: prepare (host) -> dispatch (device) -> collect (host)
+# --------------------------------------------------------------------------
+
+class PipelinedBackend:
+    """A batch backend split into its host and device phases.
+
+    The composed call ``collect(dispatch(prepare(configs)))`` is the plain
+    ``batch_fn`` contract, so a `PipelinedBackend` drops into every
+    existing engine path (retry, nan-guard heal, naive comparisons). The
+    split exists so `SurrogateEngine._eval_chunked` can overlap the
+    phases across chunks:
+
+    * ``prepare(configs) -> X`` — host-side featurization (NumPy table
+      lookup plus, under schema v2, the batched timing sweep and the
+      tiny-image functional probe). Runs on the prefetch worker thread.
+    * ``dispatch(X) -> handle`` — hand the features to the device and
+      start compute. Under JAX async dispatch the jitted call returns
+      immediately with a future-like device array, so the engine can keep
+      dispatching while earlier chunks execute. With ``devices > 1`` the
+      GNN constructors shard X's leading (config) axis here.
+    * ``collect(handle) -> (B, n_obj) ndarray`` — block on the device
+      result, transfer, and post-process (denormalize, ssim flip).
+
+    ``devices`` records the shard width for `EngineStats`; it is a cap —
+    the actual mesh per chunk is the largest device prefix dividing that
+    chunk's length (`meshes.shard_leading_axis`), which for power-of-two
+    buckets is the full cap whenever the cap is a power of two.
+    """
+
+    def __init__(self, prepare: Callable[[Sequence[Config]], Any],
+                 dispatch: Callable[[Any], Any],
+                 collect: Callable[[Any], np.ndarray], *,
+                 devices: int = 1):
+        self.prepare = prepare
+        self.dispatch = dispatch
+        self.collect = collect
+        self.devices = max(1, int(devices))
+
+    def __call__(self, configs: Sequence[Config]) -> np.ndarray:
+        return self.collect(self.dispatch(self.prepare(configs)))
+
+
+def _resolve_devices(devices) -> int:
+    """Normalize the ``devices`` knob to a shard cap.
+
+    ``1``/``None`` = single-device (no sharding, no mesh work at all);
+    ``0`` or ``"auto"`` = every local device; ``N > 1`` = at most N local
+    devices. Resolution imports jax lazily so plain-NumPy engines never
+    pull it in."""
+    if devices is None or devices == 1:
+        return 1
+    if devices == 0 or devices == "auto":
+        import jax
+        return len(jax.devices())
+    n = int(devices)
+    if n < 0:
+        raise ValueError(f"devices must be >= 0 or 'auto', got {devices}")
+    import jax
+    return max(1, min(n, len(jax.devices())))
+
+
+def _maybe_shard(X, n_devices: int):
+    """Shard X's leading (config) axis over up to `n_devices` devices;
+    identity when the cap is 1 (single-device engines never touch the
+    mesh machinery)."""
+    if n_devices <= 1:
+        return X
+    from repro.distributed import meshes
+    return meshes.shard_leading_axis(X, int(X.shape[0]),
+                                     max_devices=n_devices)
 
 
 # --------------------------------------------------------------------------
@@ -293,9 +433,24 @@ class SurrogateEngine:
     `dse.as_engine`).
 
     Args:
-        batch_fn:    ``configs -> (len(configs), n_obj)`` backend.
+        batch_fn:    ``configs -> (len(configs), n_obj)`` backend, or a
+                     `PipelinedBackend` whose prepare/dispatch/collect
+                     phases the engine overlaps across chunks.
         backend:     label for stats/reporting ("jax", "pallas", ...).
-        chunk_size:  maximum configs per backend call.
+        chunk_size:  maximum configs per backend call. ``None`` disables
+                     chunking entirely — the whole miss list goes to the
+                     backend in one call (used by `queued_view`, whose
+                     coalescing decisions belong to the drain side; only
+                     valid with ``fixed_shape=False``).
+        overlap:     pipeline chunk evaluation when the backend is a
+                     `PipelinedBackend` and a call spans >= 2 chunks:
+                     chunk k+1 featurizes on a worker thread while chunk
+                     k computes on device, and transfers are deferred
+                     until every chunk is in flight. Bit-identical to the
+                     serial path (the identical phase functions run in
+                     the identical per-chunk order). ``None`` = auto (on
+                     exactly when the backend is pipelined); ``False``
+                     forces the serial path.
         fixed_shape: pad ragged final chunks up to a power-of-two bucket so
                      jit-compiled backends see a bounded set of shapes.
                      Leave False for shape-insensitive backends (oracle,
@@ -332,21 +487,33 @@ class SurrogateEngine:
     """
 
     def __init__(self, batch_fn: BatchFn, *, backend: str = "generic",
-                 chunk_size: int = 512, fixed_shape: bool = False,
+                 chunk_size: Optional[int] = 512,
+                 fixed_shape: bool = False,
+                 overlap: Optional[bool] = None,
                  cache: bool = True, max_cache: int = 1_000_000,
                  obj_cols: Optional[int] = None, retry=None,
                  nan_guard: bool = True, nan_retries: int = 2,
                  schema_version: Optional[int] = None):
-        if chunk_size < 1:
-            raise ValueError("chunk_size must be >= 1")
+        if chunk_size is not None and chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1 (or None to "
+                             "disable chunking)")
+        if chunk_size is None and fixed_shape:
+            raise ValueError("fixed_shape needs chunking: power-of-two "
+                             "buckets are capped at chunk_size")
         self._batch_fn = batch_fn
+        self._pipeline = batch_fn if isinstance(batch_fn, PipelinedBackend) \
+            else None
+        self.overlap = (self._pipeline is not None) if overlap is None \
+            else bool(overlap)
+        self.devices = self._pipeline.devices if self._pipeline else 1
+        self._warned_padding = False
         self.backend = backend
         # feature-schema version of the backend's featurization, when it
         # has one (the GNN/RF paths): memo keys are prefixed with it so a
         # cache shared or persisted across schema bumps can never serve a
         # stale-layout row to a new-schema model
         self.schema_version = schema_version
-        self.chunk_size = int(chunk_size)
+        self.chunk_size = None if chunk_size is None else int(chunk_size)
         self.fixed_shape = fixed_shape
         self.cache_enabled = cache
         self.max_cache = max_cache
@@ -356,7 +523,7 @@ class SurrogateEngine:
         self.nan_retries = int(nan_retries)
         self.quarantined: set = set()
         self._cache: Dict[Config, np.ndarray] = {}
-        self.stats = EngineStats()
+        self.stats = EngineStats(devices=self.devices)
         # one engine may serve several concurrent samplers (the island
         # orchestrator, repro.core.islands); the lock keeps cache/stats
         # mutation and backend dispatch coherent under that sharing
@@ -438,9 +605,10 @@ class SurrogateEngine:
         return out
 
     def reset_stats(self) -> None:
-        """Zero the counters (cache contents are kept)."""
+        """Zero the counters (cache contents and the engine's device
+        width are kept)."""
         with self._lock:
-            self.stats = EngineStats()
+            self.stats = EngineStats(devices=self.devices)
 
     def clear_cache(self) -> None:
         """Drop all memoized results."""
@@ -550,11 +718,12 @@ class SurrogateEngine:
         caller holding a view participates in cross-request batching
         while keeping private stats (`DSEResult.stats` then reports the
         request's own traffic). The view does no chunking or padding of
-        its own (one submission per sampler query keeps coalescing
-        decisions with the drain side) and memoizes locally on top of the
-        shared memo. Views serve objective rows only (the shared
-        ``__call__`` slices off any uncertainty block before the rows
-        reach the queue).
+        its own — ``chunk_size=None`` is the engine's explicit
+        no-chunking mode, so one sampler query is one submission and all
+        coalescing decisions stay with the drain side — and memoizes
+        locally on top of the shared memo. Views serve objective rows
+        only (the shared ``__call__`` slices off any uncertainty block
+        before the rows reach the queue).
         """
         parent = self
 
@@ -562,7 +731,7 @@ class SurrogateEngine:
             return parent.submit(configs).result(timeout=timeout)
 
         return SurrogateEngine(batch_fn, backend=f"queued:{self.backend}",
-                               chunk_size=1 << 30, fixed_shape=False,
+                               chunk_size=None, fixed_shape=False,
                                cache=cache)
 
     # -- chunking ----------------------------------------------------------
@@ -612,16 +781,53 @@ class SurrogateEngine:
                 self.stats.update(quarantined=1)
         return y
 
-    def _eval_chunked(self, configs: List[Config]) -> np.ndarray:
-        rows = []
+    def _plan_chunks(self, configs: List[Config]
+                     ) -> List[Tuple[int, int, List[Config]]]:
+        """Split the miss list into ``(start, take, padded_chunk)`` work
+        items. ``chunk_size=None`` plans the whole list as one chunk (the
+        explicit no-chunking mode `queued_view` uses); fixed-shape
+        padding up to the power-of-two bucket is applied and counted
+        here."""
+        plan: List[Tuple[int, int, List[Config]]] = []
         i, n = 0, len(configs)
+        size = n if self.chunk_size is None else self.chunk_size
         while i < n:
-            take = min(self.chunk_size, n - i)
+            take = min(size, n - i)
             chunk = configs[i:i + take]
             if self.fixed_shape and take < self.chunk_size:
                 b = self._bucket(take)
                 self.stats.update(padded=b - take)
                 chunk = chunk + [chunk[-1]] * (b - take)
+            plan.append((i, take, chunk))
+            i += take
+        return plan
+
+    def _warn_padding(self, plan, n_configs: int) -> None:
+        """One-line, once-per-engine warning when ragged padding exceeds
+        `PADDING_WARN_FRACTION` of a wave's backend rows — chronic waste
+        at this level means the caller's batch shapes fight the
+        power-of-two buckets and ``chunk_size`` should be retuned."""
+        if self._warned_padding:
+            return
+        pad_rows = sum(len(c) - take for _, take, c in plan)
+        total = pad_rows + n_configs
+        if pad_rows and pad_rows > PADDING_WARN_FRACTION * total:
+            self._warned_padding = True
+            warnings.warn(
+                f"engine[{self.backend}]: {pad_rows}/{total} backend rows "
+                f"({pad_rows / total:.0%}) in this wave are ragged-chunk "
+                f"padding (> {PADDING_WARN_FRACTION:.0%} of the wave) — "
+                f"retune chunk_size or the caller's batch shape "
+                f"(stats.padded_fraction tracks the running rate)",
+                RuntimeWarning, stacklevel=4)
+
+    def _eval_chunked(self, configs: List[Config]) -> np.ndarray:
+        plan = self._plan_chunks(configs)
+        self._warn_padding(plan, len(configs))
+        if self.overlap and self._pipeline is not None and len(plan) >= 2:
+            return self._eval_pipelined(plan, configs)
+        rows = []
+        for i, take, chunk in plan:
             y = self._eval_backend(chunk)
             if y.shape[0] != len(chunk):
                 raise ValueError(
@@ -632,7 +838,91 @@ class SurrogateEngine:
                 part = self._guard_rows(configs[i:i + take], part)
             rows.append(part)
             self.stats.update(chunks=1)
-            i += take
+        return np.concatenate(rows, 0)
+
+    def _eval_pipelined(self, plan: List[Tuple[int, int, List[Config]]],
+                        configs: List[Config]) -> np.ndarray:
+        """Two-stage pipelined execution of the chunk plan (the LM decode
+        idiom): ONE worker thread runs the backend's host ``prepare``
+        (featurization: table lookup + timing sweep + functional probe)
+        into a bounded two-slot queue while the main thread ``dispatch``es
+        chunks to the device — non-blocking under JAX async dispatch — so
+        chunk k+1 featurizes while chunk k computes; the blocking
+        ``collect`` (device→host transfer + post-processing) is deferred
+        until every chunk is in flight.
+
+        Bit-identical to the serial path: the identical three phase
+        functions run once per (identically padded) chunk in the identical
+        order — only wall-clock interleaving changes. Any chunk whose
+        phase raises is re-evaluated through `_eval_backend` (the composed
+        call, under the engine's RetryPolicy), preserving the serial
+        path's retry/nan-guard fault semantics.
+        """
+        pb = self._pipeline
+        prepared: "queue_lib.Queue" = queue_lib.Queue(maxsize=2)
+
+        def featurize_worker() -> None:
+            for idx, (_, _, chunk) in enumerate(plan):
+                t0 = time.perf_counter()
+                try:
+                    X = pb.prepare(chunk)
+                except BaseException as e:  # noqa: BLE001 — re-raised below
+                    prepared.put((idx, e, time.perf_counter() - t0))
+                    return
+                prepared.put((idx, X, time.perf_counter() - t0))
+
+        worker = threading.Thread(target=featurize_worker, daemon=True,
+                                  name="engine-featurize")
+        worker.start()
+        inflight: List[Tuple[int, Any]] = []   # (plan index, handle|None)
+        feat_s = disp_s = overlapped_s = 0.0
+        for k in range(len(plan)):
+            idx, X, dt = prepared.get()
+            feat_s += dt
+            if k > 0:
+                # every chunk after the first featurized while earlier
+                # chunks were executing on device (dispatch returned
+                # without blocking), so its prepare cost was hidden
+                overlapped_s += dt
+            if isinstance(X, BaseException):
+                # worker died: this and all later chunks fall back to
+                # the composed serial call in the collect loop
+                inflight.extend((j, None) for j in range(idx, len(plan)))
+                break
+            t0 = time.perf_counter()
+            try:
+                handle = pb.dispatch(X)
+            except BaseException:           # noqa: BLE001 — healed below
+                handle = None
+            disp_s += time.perf_counter() - t0
+            inflight.append((idx, handle))
+        worker.join()
+        self.stats.update(featurize_s=feat_s, dispatch_s=disp_s,
+                          overlapped_s=overlapped_s)
+        rows: List[Optional[np.ndarray]] = [None] * len(plan)
+        coll_s = 0.0
+        for idx, handle in inflight:
+            i, take, chunk = plan[idx]
+            t0 = time.perf_counter()
+            y = None
+            if handle is not None:
+                try:
+                    y = np.asarray(pb.collect(handle))
+                except BaseException:       # noqa: BLE001 — healed below
+                    y = None
+            if y is None:
+                y = self._eval_backend(chunk)
+            coll_s += time.perf_counter() - t0
+            if y.shape[0] != len(chunk):
+                raise ValueError(
+                    f"backend returned {y.shape[0]} rows for "
+                    f"{len(chunk)} configs")
+            part = y[:take]
+            if self.nan_guard and not np.all(np.isfinite(part)):
+                part = self._guard_rows(configs[i:i + take], part)
+            rows[idx] = part
+            self.stats.update(chunks=1)
+        self.stats.update(collect_s=coll_s)
         return np.concatenate(rows, 0)
 
     # -- constructors ------------------------------------------------------
@@ -641,12 +931,24 @@ class SurrogateEngine:
     def from_gnn(cls, two_cfg, params, ds, app,
                  entries: Dict[str, Sequence], *, chunk_size: int = 512,
                  use_kernel: str = "auto", cache: bool = True,
+                 devices: int = 1, overlap: Optional[bool] = None,
                  parity_atol: float = 2e-3) -> "SurrogateEngine":
         """GNN-surrogate engine (the ApproxPilot fast path).
 
         Featurizes by table lookup, runs the two-stage model under jit with
         bucketed batch shapes, denormalizes and flips ssim to the
-        minimized ``1 - ssim`` objective.
+        minimized ``1 - ssim`` objective. The backend is a
+        `PipelinedBackend`, so multi-chunk calls overlap host
+        featurization with device compute by default (``overlap``, see
+        `SurrogateEngine` — disableable for measurement).
+
+        ``devices``: shard each chunk's config axis over up to this many
+        local devices (``0`` = all of them) via
+        `meshes.shard_leading_axis` — per-row compute is independent, so
+        results are bit-identical to ``devices=1`` at any width
+        (tests/test_engine_sharded.py). Power-of-two chunk buckets divide
+        evenly over power-of-two device counts, so sharding never forces
+        a fallback to replication on the fixed-shape path.
 
         ``use_kernel``: "auto" dispatches to the Pallas `gnn_mp` kernel on
         TPU for the gcn/gsae architectures, transparently falling back to
@@ -694,22 +996,32 @@ class SurrogateEngine:
                     "use_kernel='on' but the gnn_mp kernel path failed the "
                     f"parity check against pure JAX (atol={parity_atol})")
 
-        import jax.numpy as jnp
+        n_dev = _resolve_devices(devices)
 
-        def batch_fn(configs):
-            y = np.asarray(predict(jnp.asarray(feat(configs))))
+        def prepare(configs):
+            return feat(configs)            # host: lookup + dynamic sweep
+
+        def dispatch(X):
+            return predict(_maybe_shard(np.asarray(X), n_dev))
+
+        def collect(y_dev):
+            y = np.asarray(y_dev)           # blocks on device compute
             y = ds.denorm_y(y)
             y[:, 3] = 1 - y[:, 3]           # ssim -> 1-ssim (minimize)
             return y
 
-        return cls(batch_fn, backend=backend, chunk_size=chunk_size,
-                   fixed_shape=True, cache=cache, schema_version=sv)
+        pb = PipelinedBackend(prepare, dispatch, collect, devices=n_dev)
+        return cls(pb, backend=backend, chunk_size=chunk_size,
+                   fixed_shape=True, cache=cache, overlap=overlap,
+                   schema_version=sv)
 
     @classmethod
     def from_gnn_shared(cls, two_cfg, params, merged, app_name: str,
                         entries: Dict[str, Sequence], *,
-                        chunk_size: int = 512,
-                        cache: bool = True) -> "SurrogateEngine":
+                        chunk_size: int = 512, cache: bool = True,
+                        devices: int = 1,
+                        overlap: Optional[bool] = None
+                        ) -> "SurrogateEngine":
         """Per-app view of the cross-app unified surrogate.
 
         ``merged`` is the `repro.core.dataset.MergedDataset` the shared
@@ -719,9 +1031,10 @@ class SurrogateEngine:
         view featurizes configs with the app's own `ConfigFeaturizer` at
         the merged pad width, appends the app-identity one-hot block, and
         denormalizes with the app's y stats — so five scenarios are
-        served off one set of trained parameters.
+        served off one set of trained parameters. ``devices``/``overlap``
+        behave exactly as in `from_gnn` (pipelined backend, leading-axis
+        sharding).
         """
-        import jax.numpy as jnp
         from repro.accel import apps as apps_lib
         from repro.core import dataset as ds_lib
         from repro.core import graph as graph_lib
@@ -737,25 +1050,35 @@ class SurrogateEngine:
         block = graph_lib.app_block(app_name, feat.mask)      # (N, A)
         jax_predict = _make_jax_predict(two_cfg, params, feat.adj,
                                         feat.mask)
+        n_dev = _resolve_devices(devices)
 
-        def batch_fn(configs):
+        def prepare(configs):
             X = feat.normalized(configs)
-            Xa = np.concatenate(
+            return np.concatenate(
                 [X, np.broadcast_to(block, (X.shape[0],) + block.shape)],
                 axis=-1)
-            y = np.asarray(jax_predict(jnp.asarray(Xa)))
+
+        def dispatch(Xa):
+            return jax_predict(_maybe_shard(np.ascontiguousarray(Xa),
+                                            n_dev))
+
+        def collect(y_dev):
+            y = np.asarray(y_dev)
             y = ds.denorm_y(y)
             y[:, 3] = 1 - y[:, 3]           # ssim -> 1-ssim (minimize)
             return y
 
-        return cls(batch_fn, backend="jax-shared", chunk_size=chunk_size,
-                   fixed_shape=True, cache=cache,
+        pb = PipelinedBackend(prepare, dispatch, collect, devices=n_dev)
+        return cls(pb, backend="jax-shared", chunk_size=chunk_size,
+                   fixed_shape=True, cache=cache, overlap=overlap,
                    schema_version=feat.schema.version)
 
     @classmethod
     def from_gnn_ensemble(cls, ens, ds, app, entries: Dict[str, Sequence],
-                          *, chunk_size: int = 512,
-                          cache: bool = True) -> "SurrogateEngine":
+                          *, chunk_size: int = 512, cache: bool = True,
+                          devices: int = 1,
+                          overlap: Optional[bool] = None
+                          ) -> "SurrogateEngine":
         """Ensemble-GNN engine: objectives = denormalized ensemble MEAN,
         plus a per-objective ensemble-std uncertainty block (columns
         [obj_cols:]) for the DSE acquisition path.
@@ -764,7 +1087,10 @@ class SurrogateEngine:
         group runs as one vmapped jit over the member axis (pure-JAX path
         — the Pallas gnn_mp dispatch stays single-model for now). The std
         is denormalized with the same per-target scale as the mean; the
-        ssim flip (1 - ssim) leaves its std unchanged.
+        ssim flip (1 - ssim) leaves its std unchanged. ``devices`` shards
+        each chunk's config axis (the vmapped member axis stays local);
+        ``overlap`` pipelines featurization exactly as in `from_gnn` —
+        dispatch enqueues every member group before collect blocks.
         """
         import jax
         import jax.numpy as jnp
@@ -786,18 +1112,26 @@ class SurrogateEngine:
             group_fns.append(gf)
 
         n_obj = len(models_lib.TARGETS)
+        n_dev = _resolve_devices(devices)
 
-        def batch_fn(configs):
-            X = jnp.asarray(feat(configs))
-            Y = np.concatenate([np.asarray(gf(X)) for gf in group_fns], 0)
+        def prepare(configs):
+            return feat(configs)
+
+        def dispatch(X):
+            Xs = _maybe_shard(np.asarray(X), n_dev)
+            return [gf(Xs) for gf in group_fns]
+
+        def collect(handles):
+            Y = np.concatenate([np.asarray(h) for h in handles], 0)
             mean = ds.denorm_y(Y.mean(0))
             std = Y.std(0) * np.asarray(ds.y_std)
             mean[:, 3] = 1 - mean[:, 3]     # ssim -> 1-ssim (minimize)
             return np.concatenate([mean, std], 1)
 
-        return cls(batch_fn, backend="gnn-ensemble", chunk_size=chunk_size,
+        pb = PipelinedBackend(prepare, dispatch, collect, devices=n_dev)
+        return cls(pb, backend="gnn-ensemble", chunk_size=chunk_size,
                    fixed_shape=True, cache=cache, obj_cols=n_obj,
-                   schema_version=feat.schema.version)
+                   overlap=overlap, schema_version=feat.schema.version)
 
     @classmethod
     def from_rforest(cls, rf_models: Dict[int, "object"], ds, app,

@@ -112,7 +112,13 @@ class FeatureSchema:
     def dynamic_fields(self) -> Tuple[str, ...]:
         """Config-dynamic timing fields filled by the batched timing
         oracle on the DSE hot path (everything in the timing block except
-        the crit bit, which stage 1 predicts at inference)."""
+        the crit bit, which stage 1 predicts at inference).
+
+        These columns are what makes featurization host work worth
+        pipelining: under schema v2 every cold engine chunk pays a
+        timing sweep + two-scale functional probe, which the engine's
+        overlap mode (`SurrogateEngine`, ``overlap=True``) runs on a
+        prefetch thread while the previous chunk executes on device."""
         return tuple(f for f in self.block("timing").fields
                      if f != "on_critical_path")
 

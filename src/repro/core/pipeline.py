@@ -72,6 +72,11 @@ class PipelineConfig:
     use_critical_path: bool = True
     surrogate: str = "gnn"          # gnn | rf | oracle
     eval_chunk: int = 512           # engine chunk size for the DSE loop
+    eval_devices: int = 1           # shard engine chunks over up to N
+                                    # local devices (0 = all); results
+                                    # are bit-identical at any width
+    eval_overlap: bool = True       # overlap host featurization with
+                                    # device compute on multi-chunk waves
     use_kernel: str = "auto"        # Pallas gnn_mp: auto | on | off
     ensemble_members: int = 0       # >0: vmapped GNN ensemble + uncertainty
     ensemble_archs: Optional[Tuple[str, ...]] = None  # per-member archs
@@ -170,6 +175,12 @@ def _train_spec(cfg: PipelineConfig) -> Dict:
 
 
 def _engine_spec(cfg: PipelineConfig) -> Dict:
+    # eval_devices / eval_overlap are deliberately EXCLUDED (like
+    # dse_checkpoint_every from the search spec): sharded and overlapped
+    # engines are bit-identical to the single-device serial one, so all
+    # widths share one cache slot. Consequence: a memory-cached engine is
+    # NOT reconfigured by changing only those knobs — evict the engine
+    # key (or use a fresh store) to rebuild at a different width.
     return {"train": _train_spec(cfg), "eval_chunk": cfg.eval_chunk,
             "use_kernel": cfg.use_kernel}
 
@@ -315,11 +326,14 @@ def stage_engine(cfg: PipelineConfig, store: ArtifactStore,
         if art.ens is not None:
             return SurrogateEngine.from_gnn_ensemble(
                 art.ens, ds, ctx.app, ctx.entries,
-                chunk_size=cfg.eval_chunk)
+                chunk_size=cfg.eval_chunk, devices=cfg.eval_devices,
+                overlap=cfg.eval_overlap)
         return SurrogateEngine.from_gnn(art.two_cfg, art.params, ds,
                                         ctx.app, ctx.entries,
                                         chunk_size=cfg.eval_chunk,
-                                        use_kernel=cfg.use_kernel)
+                                        use_kernel=cfg.use_kernel,
+                                        devices=cfg.eval_devices,
+                                        overlap=cfg.eval_overlap)
 
     key = store.key("engine", _engine_spec(cfg))
     return store.get_or_build("engine", key, build, memory_only=True)
@@ -561,7 +575,8 @@ def unified_surrogate(apps: Sequence[str], cfg: PipelineConfig,
     t0 = time.time()
     engines = {a: SurrogateEngine.from_gnn_shared(
         two_cfg, fit["params"], merged, a, ctxs[a].entries,
-        chunk_size=cfg.eval_chunk) for a in apps}
+        chunk_size=cfg.eval_chunk, devices=cfg.eval_devices,
+        overlap=cfg.eval_overlap) for a in apps}
     t["engines"] = time.time() - t0
     return UnifiedResult(two_cfg, fit["params"], merged, fit["metrics"],
                          engines, t)

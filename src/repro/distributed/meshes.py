@@ -178,18 +178,23 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def shard_leading_axis(tree, n_leading: int, axis_name: str = "shard"):
+def shard_leading_axis(tree, n_leading: int, axis_name: str = "shard",
+                       max_devices: Optional[int] = None):
     """SPMD-shard the leading axis of every array in `tree` over devices.
 
     For programs whose leading-axis slices are fully independent (ensemble
-    members in `training.fit_ensemble`, islands in `islands.run_islands`)
-    sharding the leading axis runs the slices in parallel with ZERO
-    cross-device communication, so per-slice results stay bit-identical
-    to the unsharded run. Uses the largest device prefix whose size
-    divides `n_leading`; returns `tree` unchanged when that prefix is a
-    single device.
+    members in `training.fit_ensemble`, islands in `islands.run_islands`,
+    config rows in the surrogate engine's chunk dispatch —
+    `engine.SurrogateEngine.from_gnn(devices=...)`) sharding the leading
+    axis runs the slices in parallel with ZERO cross-device
+    communication, so per-slice results stay bit-identical to the
+    unsharded run. Uses the largest device prefix whose size divides
+    `n_leading` (capped at `max_devices` when given); returns `tree`
+    unchanged when that prefix is a single device.
     """
     devs = jax.devices()
+    if max_devices is not None:
+        devs = devs[:max(1, int(max_devices))]
     k = 0
     for d in range(min(len(devs), n_leading), 0, -1):
         if n_leading % d == 0:

@@ -287,7 +287,16 @@ class EvalService:
         `PipelineConfig`: prune -> dataset -> train -> engine through the
         cached stages, so a second session with the same config slice
         reuses the disk-tier dataset/params and the memory-tier engine —
-        and is therefore served bit-identically to `run_staged`."""
+        and is therefore served bit-identically to `run_staged`.
+
+        ``cfg.eval_devices`` / ``cfg.eval_overlap`` flow through
+        `stage_engine` to the tenant's engine, so drain waves coalesced
+        from many concurrent clients shard across the host's devices and
+        overlap featurization with device compute (bit-identical either
+        way — see docs/serving.md "Sharding and overlap"). Note the
+        engine cache key deliberately ignores those knobs: a tenant
+        warm-started on a store that already carries the engine keeps the
+        cached engine's width (evict the ``engine-*`` key to rebuild)."""
         from repro.core import pipeline as P
 
         ctx = P.stage_prune(cfg, self.store)
